@@ -1,0 +1,52 @@
+"""Benchmark harness utilities.
+
+Paper protocol (Section 5.1.3): repeat each measurement 7 times, drop the
+min and max, report the mean of the remaining 5. CSV rows are
+``name,us_per_call,derived`` — ``derived`` carries the table's comparison
+quantity (relative slowdown, counts, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.data import powerlaw_graph
+from repro.graph import apply_ordering, order_nodes, prune_symmetric
+
+REPEATS = 7
+
+
+def timeit(fn: Callable, repeats: int = REPEATS) -> float:
+    """Microseconds per call, trimmed mean (drop min+max of 7)."""
+    times = []
+    fn()  # warmup / compile
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times = sorted(times)[1:-1] if len(times) > 2 else times
+    return float(np.mean(times))
+
+
+def row(name: str, us: float, derived="") -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def bench_graphs(seed: int = 0):
+    """Synthetic stand-ins matched to the paper's density-skew regimes
+    (Table 3): high-skew (Google+-like), modest (Higgs/Twitter-like),
+    low (LiveJournal/Patents-like). Sized for CPU benchmarking."""
+    return {
+        "highskew": powerlaw_graph(2000, 14, 1.7, seed=seed),
+        "midskew": powerlaw_graph(2000, 12, 2.1, seed=seed + 1),
+        "lowskew": powerlaw_graph(2000, 10, 2.8, seed=seed + 2),
+    }
+
+
+def pruned_degree_ordered(g):
+    """The paper's standard preprocessing for symmetric queries: order by
+    degree, keep src > dst."""
+    g2 = apply_ordering(g, order_nodes(g, "degree"))
+    return prune_symmetric(g2)

@@ -1,0 +1,65 @@
+"""Figures 4/5/8/9: set-intersection micro-benchmarks.
+
+  density sweep  (fig 4/5): uint search vs blocked bitset at fixed range,
+                 varying density — the crossover motivates Algorithm 3.
+  cardinality-skew sweep (fig 8): lockstep search (min-property /
+                 SIMDGalloping analogue) vs the membership-test kernel
+                 (SIMDShuffling analogue) at ratios 1:1 .. 1:256 — the
+                 crossover motivates Algorithm 2's 32:1 switch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import intersect as I
+from repro.core.trie import CSRGraph
+from repro.kernels.uint_intersect.ops import uint_intersect_count
+
+
+def _set_pair_csr(a: np.ndarray, b: np.ndarray, n: int) -> CSRGraph:
+    offsets = np.array([0, len(a), len(a) + len(b)], np.int64)
+    return CSRGraph(2, offsets, np.concatenate([a, b]).astype(np.int32))
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    rangev = 1 << 16
+
+    # ---- density sweep (fixed range, vary |S|)
+    for density in (0.001, 0.01, 0.05, 0.2, 0.5):
+        card = max(4, int(rangev * density))
+        a = np.sort(rng.choice(rangev, card, replace=False))
+        b = np.sort(rng.choice(rangev, card, replace=False))
+        csr = _set_pair_csr(a, b, rangev)
+        u = np.zeros(64, np.int64)
+        v = np.ones(64, np.int64)
+        t_uint = timeit(lambda: I.intersect_count_uint(
+            csr.offsets, csr.neighbors, u, v), repeats=3)
+        bs = I.build_blocked_bitset(csr.offsets, csr.neighbors,
+                                    np.array([0, 1]), rangev, 256)
+        t_bits = timeit(lambda: I.bitset_intersect_count(
+            bs, np.zeros(64, np.int64), np.ones(64, np.int64)), repeats=3)
+        rows.append(row(f"fig4/density={density}/uint", t_uint, ""))
+        rows.append(row(f"fig4/density={density}/bitset", t_bits,
+                        f"rel={t_bits / t_uint:.2f}x"))
+
+    # ---- cardinality-skew sweep (fig 8)
+    small_card = 64
+    for ratio in (1, 4, 32, 128, 256):
+        big = np.sort(rng.choice(1 << 20, small_card * ratio, replace=False))
+        small = np.sort(rng.choice(big, small_card, replace=False))
+        csr = _set_pair_csr(small, big, 1 << 20)
+        u = np.zeros(32, np.int64)
+        v = np.ones(32, np.int64)
+        t_search = timeit(lambda: I.intersect_count_uint(
+            csr.offsets, csr.neighbors, u, v), repeats=3)
+        a_pad = np.broadcast_to(small, (32, small_card))
+        b_pad = np.broadcast_to(big, (32, len(big)))
+        t_member = timeit(lambda: np.asarray(uint_intersect_count(
+            a_pad, b_pad, interpret=True)), repeats=3)
+        rows.append(row(f"fig8/ratio=1:{ratio}/search", t_search, ""))
+        rows.append(row(f"fig8/ratio=1:{ratio}/membership", t_member,
+                        f"rel={t_member / t_search:.2f}x"))
+    return rows

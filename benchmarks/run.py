@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only tableN]``
+prints ``name,us_per_call,derived`` CSV rows (paper protocol: 7 runs,
+trimmed mean).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module name")
+    args = ap.parse_args()
+
+    from benchmarks import (appc_orderings, fig4_intersect_micro,
+                            table4_layout_oracle, table5_triangle,
+                            table6_pagerank, table7_sssp, table8_ablations)
+    modules = [table5_triangle, table6_pagerank, table7_sssp,
+               table8_ablations, table4_layout_oracle,
+               fig4_intersect_micro, appc_orderings]
+
+    print("name,us_per_call,derived")
+    for mod in modules:
+        name = mod.__name__.split(".")[-1]
+        if args.only and args.only not in name:
+            continue
+        t0 = time.monotonic()
+        try:
+            for r in mod.run():
+                print(r)
+                sys.stdout.flush()
+        except Exception as e:  # report and continue
+            print(f"{name},ERROR,{e!r}")
+        print(f"# {name} finished in {time.monotonic() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Table 5: triangle counting.
+
+Engines compared (in-container stand-ins for the paper's competitor set):
+  eh          EmptyHeaded: set-level layout optimizer + hybrid intersections
+  eh-uint     relation-level uint only ("-R", what low-level engines do)
+  eh-mxu      beyond-paper MXU masked-matmul path on the dense cohort
+  numpy-A3    trace(A^3)/6 dense-linear-algebra baseline
+The derived column reports the triangle count (all must agree) and the
+relative slowdown vs eh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_graphs, pruned_degree_ordered, row, timeit
+from repro.core.layouts import (HybridSetStore, decide_relation_level,
+                                decide_set_level)
+from repro.kernels.triangle_mm.ops import densify_csr, triangle_count_dense
+
+
+def triangle_count_store(store, csr) -> int:
+    src = np.repeat(np.arange(csr.n), csr.degrees)
+    return int(store.intersect_count(src, csr.neighbors).sum())
+
+
+def run() -> list:
+    rows = []
+    for gname, g in bench_graphs().items():
+        csr = pruned_degree_ordered(g)
+        store_set = HybridSetStore.build(csr)
+        store_uint = HybridSetStore.build(
+            csr, decision=decide_relation_level(csr, "uint"))
+        dense = densify_csr(csr.offsets, csr.neighbors, csr.n)
+
+        count = triangle_count_store(store_set, csr)
+        t_eh = timeit(lambda: triangle_count_store(store_set, csr))
+        t_uint = timeit(lambda: triangle_count_store(store_uint, csr))
+        # interpret-mode Pallas executes block-by-block in Python: time 2
+        # calls with a larger block so the CPU benchmark stays bounded
+        # (the kernel targets the MXU; see EXPERIMENTS.md §Perf notes)
+        t_mxu = timeit(lambda: float(triangle_count_dense(
+            dense, symmetric=False, block=1024)), repeats=2)
+        # float64 keeps counts exact (< 2^53) and BLAS-fast; int64 matmul
+        # has no BLAS path and is ~100x slower
+        t_np = timeit(lambda: int(round(np.trace(
+            dense.astype(np.float64) @ dense @ dense))), repeats=3)
+
+        c_mxu = int(triangle_count_dense(dense, symmetric=False,
+                                         block=1024))
+        assert c_mxu == count, (c_mxu, count)
+        assert triangle_count_store(store_uint, csr) == count
+
+        frac_dense = store_set.stats()["frac_dense"]
+        rows.append(row(f"table5/{gname}/eh", t_eh,
+                        f"count={count};frac_dense={frac_dense:.2f}"))
+        rows.append(row(f"table5/{gname}/eh-uint(-R)", t_uint,
+                        f"rel={t_uint / t_eh:.2f}x"))
+        rows.append(row(f"table5/{gname}/eh-mxu", t_mxu,
+                        f"rel={t_mxu / t_eh:.2f}x"))
+        rows.append(row(f"table5/{gname}/numpy-A3", t_np,
+                        f"rel={t_np / t_eh:.2f}x"))
+    return rows

@@ -1,0 +1,68 @@
+"""Table 8: 4-Clique (K4), Lollipop (L31), Barbell (B31) with feature
+ablations:
+
+  eh     full engine (GHD plans + set-level layouts + hybrid algorithms)
+  -R     layout optimizer forced to relation-level uint
+  -GHD   single-bag WCOJ plan (no early aggregation) — the LogicBlox mode
+
+Derived: COUNT(*) (all variants must agree) and relative slowdown vs eh.
+K4 runs on pruned data (symmetric query); L31/B31 on undirected (paper
+protocol). Graphs are smaller for B31: its -GHD plan is O(N^3)-ish by
+design — that blowup IS the measurement.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_graphs, pruned_degree_ordered, row, timeit
+from repro.core.engine import Engine
+from repro.core.layouts import set_engine_layout_mode
+from repro.data import powerlaw_graph
+
+QUERIES = {
+    "K4": ("K4(;w:long) :- R(x,y),S(y,z),T(x,z),U(x,a),X(y,a),Y(z,a); "
+           "w=<<COUNT(*)>>.", True),
+    "L31": ("L(;w:long) :- R(x,y),S(y,z),T(x,z),U(x,a); w=<<COUNT(*)>>.",
+            False),
+    "B31": ("B(;w:long) :- R(x,y),S(y,z),T(x,z),U(x,a),R2(a,b),S2(b,c),"
+            "T2(a,c); w=<<COUNT(*)>>.", False),
+}
+ALIASES = ("R", "S", "T", "U", "X", "Y", "R2", "S2", "T2")
+
+
+def engine_for(csr, use_ghd=True) -> Engine:
+    eng = Engine(use_ghd=use_ghd)
+    src = np.repeat(np.arange(csr.n), csr.degrees)
+    eng.load_edges("Edge", src, csr.neighbors)
+    for a in ALIASES:
+        eng.alias(a, "Edge")
+    return eng
+
+
+def run() -> list:
+    rows = []
+    graphs = {
+        "midskew": powerlaw_graph(400, 7, 2.1, seed=11),
+        "lowskew": powerlaw_graph(400, 6, 2.8, seed=12),
+    }
+    for gname, g in graphs.items():
+        pruned = pruned_degree_ordered(g)
+        for qname, (q, symmetric) in QUERIES.items():
+            csr = pruned if symmetric else g
+            eng = engine_for(csr, use_ghd=True)
+            eng_noghd = engine_for(csr, use_ghd=False)
+            count = int(eng.query(q).scalar())
+            assert int(eng_noghd.query(q).scalar()) == count
+            t_eh = timeit(lambda: eng.query(q), repeats=3)
+            set_engine_layout_mode("uint")
+            assert int(eng.query(q).scalar()) == count
+            t_nor = timeit(lambda: eng.query(q), repeats=3)
+            set_engine_layout_mode("set")
+            t_noghd = timeit(lambda: eng_noghd.query(q), repeats=2)
+            rows.append(row(f"table8/{gname}/{qname}/eh", t_eh,
+                            f"count={count}"))
+            rows.append(row(f"table8/{gname}/{qname}/-R", t_nor,
+                            f"rel={t_nor / t_eh:.2f}x"))
+            rows.append(row(f"table8/{gname}/{qname}/-GHD", t_noghd,
+                            f"rel={t_noghd / t_eh:.2f}x"))
+    return rows

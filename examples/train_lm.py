@@ -1,0 +1,19 @@
+"""Train a reduced LM (any assigned --arch) on the synthetic token stream,
+with checkpointing and auto-resume — the framework's training driver at
+laptop scale. On a cluster, the identical step lowers under the production
+mesh (see src/repro/launch/dryrun.py).
+
+    PYTHONPATH=src python examples/train_lm.py --arch mixtral-8x7b \
+        --steps 200 --ckpt-dir /tmp/ck_mixtral
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    if "--arch" not in sys.argv:
+        sys.argv += ["--arch", "granite-3-8b"]
+    if "--steps" not in sys.argv:
+        sys.argv += ["--steps", "60"]
+    train_main()

@@ -1,0 +1,37 @@
+"""Config registry: ``--arch <id>`` resolution for launchers/tests.
+
+Ten assigned architectures + the paper's own engine config.
+"""
+from typing import Dict
+
+from repro.configs.base import ArchDef
+
+from repro.configs import (  # noqa: E402
+    arctic_480b, dimenet, emptyheaded, fm, gcn_cora, granite_3_8b, mace,
+    minicpm3_4b, mixtral_8x7b, nequip, qwen2_72b,
+)
+
+REGISTRY: Dict[str, ArchDef] = {
+    m.ARCH.name: m.ARCH
+    for m in (arctic_480b, mixtral_8x7b, granite_3_8b, qwen2_72b,
+              minicpm3_4b, dimenet, gcn_cora, nequip, mace, fm, emptyheaded)
+}
+
+ASSIGNED = [n for n in REGISTRY if n != "emptyheaded"]
+
+
+def get_arch(name: str) -> ArchDef:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def all_cells(include_skipped: bool = False):
+    """Every (arch, shape) pair in the assignment (+ engine)."""
+    out = []
+    for arch in REGISTRY.values():
+        for shape in arch.shapes.values():
+            if shape.skip and not include_skipped:
+                continue
+            out.append((arch.name, shape.name))
+    return out

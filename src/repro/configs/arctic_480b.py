@@ -1,0 +1,30 @@
+"""arctic-480b [moe] — Snowflake Arctic-style dense-MoE hybrid.
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000, MoE 128e top-2 with
+a dense residual FFN in parallel. [hf:Snowflake/snowflake-arctic-base; hf]
+
+Sharding note: 56 heads are not divisible by model=16, so the shape-aware
+resolver falls back to sharding the attention embed dim over 'model'
+(DESIGN.md §4); experts shard 8-per-chip over 'model' (EP) with weight FSDP
+over 'data'.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="arctic-480b",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32000, d_head=128,
+    attention="full",
+    n_experts=128, top_k=2, dense_residual=True,
+    dtype=jnp.bfloat16, remat="full",
+)
+
+ARCH = ArchDef(
+    name="arctic-480b", family="lm", tag="moe", config=CONFIG,
+    shapes=lm_shapes("full", sub_quadratic_decode=False),
+    source="hf:Snowflake/snowflake-arctic-base",
+    notes="128 experts top-2 + dense residual FFN",
+)

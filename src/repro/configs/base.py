@@ -1,0 +1,91 @@
+"""Config-system core: the Cell abstraction every (arch x shape) pair
+lowers through.
+
+Each arch module exposes ``ARCH: ArchDef``. A Cell names (arch, shape,
+step kind); ``repro.launch.cells`` turns a Cell into the concrete
+(fn, example inputs as ShapeDtypeStructs, shardings) triple that
+``launch/dryrun.py`` lowers and compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    kind: str                    # train | prefill | decode | score | retrieval
+    params: Dict[str, Any]
+    skip: Optional[str] = None   # reason string if this cell is N/A
+
+
+@dataclasses.dataclass
+class ArchDef:
+    name: str
+    family: str                  # lm | gnn | recsys | engine
+    tag: str                     # dense | moe | gnn | recsys | engine
+    config: Any                  # model config dataclass
+    shapes: Dict[str, ShapeDef]
+    source: str                  # provenance citation
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeDef:
+        return self.shapes[name]
+
+
+# ---------------------------------------------------------------- LM shapes
+def lm_shapes(attention: str, window: Optional[int] = None,
+              sub_quadratic_decode: bool = False) -> Dict[str, ShapeDef]:
+    """The four assigned LM shapes. ``long_500k`` needs a sub-quadratic
+    attention/cache mechanism; pure full-attention archs skip it (recorded
+    reason surfaces in EXPERIMENTS.md)."""
+    shapes = {
+        "train_4k": ShapeDef("train_4k", "train",
+                             {"seq_len": 4096, "global_batch": 256}),
+        "prefill_32k": ShapeDef("prefill_32k", "prefill",
+                                {"seq_len": 32768, "global_batch": 32}),
+        "decode_32k": ShapeDef("decode_32k", "decode",
+                               {"seq_len": 32768, "global_batch": 128}),
+    }
+    if sub_quadratic_decode:
+        shapes["long_500k"] = ShapeDef(
+            "long_500k", "decode", {"seq_len": 524288, "global_batch": 1})
+    else:
+        shapes["long_500k"] = ShapeDef(
+            "long_500k", "decode", {"seq_len": 524288, "global_batch": 1},
+            skip=f"pure full-attention arch ({attention}): 500k decode "
+                 "requires a sub-quadratic attention/cache mechanism")
+    return shapes
+
+
+# --------------------------------------------------------------- GNN shapes
+def gnn_shapes() -> Dict[str, ShapeDef]:
+    return {
+        "full_graph_sm": ShapeDef(
+            "full_graph_sm", "train",
+            {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433,
+             "n_classes": 7}),
+        "minibatch_lg": ShapeDef(
+            "minibatch_lg", "train",
+            {"n_nodes": 232_965, "n_edges": 114_615_892, "d_feat": 602,
+             "n_classes": 41, "batch_nodes": 1024, "fanout": (15, 10)}),
+        "ogb_products": ShapeDef(
+            "ogb_products", "train",
+            {"n_nodes": 2_449_029, "n_edges": 61_859_140, "d_feat": 100,
+             "n_classes": 47}),
+        "molecule": ShapeDef(
+            "molecule", "train",
+            {"n_nodes": 30, "n_edges": 64, "batch": 128}),
+    }
+
+
+# ------------------------------------------------------------ recsys shapes
+def recsys_shapes() -> Dict[str, ShapeDef]:
+    return {
+        "train_batch": ShapeDef("train_batch", "train", {"batch": 65536}),
+        "serve_p99": ShapeDef("serve_p99", "score", {"batch": 512}),
+        "serve_bulk": ShapeDef("serve_bulk", "score", {"batch": 262144}),
+        "retrieval_cand": ShapeDef("retrieval_cand", "retrieval",
+                                   {"batch": 1, "n_candidates": 1_000_000}),
+    }

@@ -1,0 +1,38 @@
+"""emptyheaded [engine] — the paper's own engine as a distributable config.
+
+The dry-run cell is edge-parallel triangle counting: edges sharded over the
+whole mesh, padded-ELL adjacency replicated, per-shard membership-test
+intersections (the uint∩uint kernel formulation), psum of the count —
+i.e. the paper's 48-thread shared-memory parallelism mapped onto a
+512-chip mesh. This is the "most representative of the paper's technique"
+hillclimb cell (EXPERIMENTS.md §Perf).
+"""
+import dataclasses
+
+from repro.configs.base import ArchDef, ShapeDef
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    name: str = "emptyheaded"
+    n_nodes: int = 1 << 22        # 4.2M nodes
+    n_edges: int = 1 << 27        # 134M directed edges
+    ell_width: int = 64           # padded adjacency width (dense cohort cap)
+
+    def param_count(self) -> int:
+        return 0
+
+
+CONFIG = EngineConfig()
+
+ARCH = ArchDef(
+    name="emptyheaded", family="engine", tag="engine", config=CONFIG,
+    shapes={
+        "triangle_lg": ShapeDef(
+            "triangle_lg", "engine",
+            {"n_nodes": CONFIG.n_nodes, "n_edges": CONFIG.n_edges,
+             "ell_width": CONFIG.ell_width}),
+    },
+    source="this paper",
+    notes="WCOJ triangle count distributed over the production mesh",
+)

@@ -1,0 +1,21 @@
+"""fm [recsys] — n_sparse=39 embed_dim=10 interaction=fm-2way.
+[ICDM'10 (Rendle); paper]
+
+Embedding tables: 39 fields x 1M rows x dim 10 (the 10^6-row-per-field
+regime of the taxonomy), row-sharded over 'model'. The FM interaction is
+the Pallas ``fm_interaction`` kernel (sum-square trick).
+"""
+from repro.configs.base import ArchDef, recsys_shapes
+from repro.models.recsys.fm import FMConfig
+
+CONFIG = FMConfig(
+    name="fm", n_sparse=39, vocab_per_field=1_000_000, embed_dim=10,
+    interaction="fm-2way",
+)
+
+ARCH = ArchDef(
+    name="fm", family="recsys", tag="recsys", config=CONFIG,
+    shapes=recsys_shapes(),
+    source="ICDM'10 (Rendle)",
+    notes="EmbeddingBag = take + segment_sum; retrieval = batched dot",
+)

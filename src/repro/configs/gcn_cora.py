@@ -1,0 +1,21 @@
+"""gcn-cora [gnn] — 2L d_hidden=16 aggregator=mean norm=sym.
+[arXiv:1609.02907; paper]
+
+Direct application of the paper's technique: a GCN layer is a
+(+, *)-semiring join-aggregate over the Edge relation (DESIGN.md §5) —
+differentially tested against the EmptyHeaded engine in tests/.
+"""
+from repro.configs.base import ArchDef, gnn_shapes
+from repro.models.gnn.gcn import GCNConfig
+
+CONFIG = GCNConfig(
+    name="gcn-cora", n_layers=2, d_hidden=16, d_feat=1433, n_classes=7,
+    aggregator="mean", norm="sym",
+)
+
+ARCH = ArchDef(
+    name="gcn-cora", family="gnn", tag="gnn", config=CONFIG,
+    shapes=gnn_shapes(),
+    source="arXiv:1609.02907",
+    notes="SpMM regime; d_feat/n_classes follow each shape's dataset",
+)

@@ -1,0 +1,22 @@
+"""granite-3-8b [dense] — 40L d_model=4096 32H (GQA kv=8) d_ff=12800
+vocab=49155. [hf:ibm-granite/granite-3.0-2b-base; hf]
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="granite-3-8b",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=12800, vocab=49155, d_head=128,
+    attention="full",
+    dtype=jnp.bfloat16, remat="dots",
+)
+
+ARCH = ArchDef(
+    name="granite-3-8b", family="lm", tag="dense", config=CONFIG,
+    shapes=lm_shapes("full", sub_quadratic_decode=False),
+    source="hf:ibm-granite/granite-3.0-2b-base",
+    notes="GQA kv=8",
+)

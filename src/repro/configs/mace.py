@@ -1,0 +1,17 @@
+"""mace [gnn] — n_layers=2 d_hidden=128 l_max=2 correlation_order=3 n_rbf=8,
+E(3)-ACE higher-order message passing. [arXiv:2206.07697; paper]
+"""
+from repro.configs.base import ArchDef, gnn_shapes
+from repro.models.gnn.equivariant import MACEConfig
+
+CONFIG = MACEConfig(
+    name="mace", n_layers=2, d_hidden=128, l_max=2, correlation_order=3,
+    n_rbf=8, cutoff=5.0,
+)
+
+ARCH = ArchDef(
+    name="mace", family="gnn", tag="gnn", config=CONFIG,
+    shapes=gnn_shapes(),
+    source="arXiv:2206.07697",
+    notes="ACE product basis via iterated CG (DESIGN.md deviation note)",
+)

@@ -1,0 +1,31 @@
+"""minicpm3-4b [dense] — 62L d_model=2560 40H d_ff=6400 vocab=73448 with
+MLA (multi-head latent attention). [hf:openbmb/MiniCPM3-4B; hf]
+
+MLA dims follow the HF config: q_lora_rank=768, kv_lora_rank=256,
+qk_nope=64, qk_rope=32, v_head=64. The decode cache stores the compressed
+latent (256 + 32 per token instead of 2*40*96) — but prefill/score compute
+is still full quadratic attention, so ``long_500k`` is skipped (the skip
+reason names MLA as cache-compressed, not sub-quadratic).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="minicpm3-4b",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40,
+    d_ff=6400, vocab=73448,
+    attention="mla",
+    q_lora_rank=768, kv_lora_rank=256,
+    qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+    dtype=jnp.bfloat16, remat="dots",
+)
+
+ARCH = ArchDef(
+    name="minicpm3-4b", family="lm", tag="dense", config=CONFIG,
+    shapes=lm_shapes("mla (latent-compressed cache, still full quadratic)",
+                     sub_quadratic_decode=False),
+    source="hf:openbmb/MiniCPM3-4B",
+    notes="MLA",
+)

@@ -1,0 +1,27 @@
+"""mixtral-8x7b [moe] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000, MoE 8e top-2, sliding-window attention (4096).
+[arXiv:2401.04088; hf]
+
+SWA gives the windowed KV cache, so mixtral is the one assigned LM arch
+that RUNS ``long_500k`` (O(window) decode cache).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="mixtral-8x7b",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=32000, d_head=128,
+    attention="swa", window=4096,
+    n_experts=8, top_k=2,
+    dtype=jnp.bfloat16, remat="dots",
+)
+
+ARCH = ArchDef(
+    name="mixtral-8x7b", family="lm", tag="moe", config=CONFIG,
+    shapes=lm_shapes("swa", window=4096, sub_quadratic_decode=True),
+    source="arXiv:2401.04088",
+    notes="8 experts top-2, SWA window 4096",
+)

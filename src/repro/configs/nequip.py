@@ -1,0 +1,16 @@
+"""nequip [gnn] — n_layers=5 d_hidden=32 l_max=2 n_rbf=8 cutoff=5,
+E(3) tensor-product equivariance. [arXiv:2101.03164; paper]
+"""
+from repro.configs.base import ArchDef, gnn_shapes
+from repro.models.gnn.equivariant import NequIPConfig
+
+CONFIG = NequIPConfig(
+    name="nequip", n_layers=5, d_hidden=32, l_max=2, n_rbf=8, cutoff=5.0,
+)
+
+ARCH = ArchDef(
+    name="nequip", family="gnn", tag="gnn", config=CONFIG,
+    shapes=gnn_shapes(),
+    source="arXiv:2101.03164",
+    notes="irrep tensor-product regime; exact real-CG algebra in-repo",
+)

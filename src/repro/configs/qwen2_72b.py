@@ -1,0 +1,22 @@
+"""qwen2-72b [dense] — 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064, QKV bias. [arXiv:2407.10671; hf]
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="qwen2-72b",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=29568, vocab=152064, d_head=128,
+    attention="full", qkv_bias=True, rope_theta=1e6,
+    dtype=jnp.bfloat16, remat="full",
+)
+
+ARCH = ArchDef(
+    name="qwen2-72b", family="lm", tag="dense", config=CONFIG,
+    shapes=lm_shapes("full", sub_quadratic_decode=False),
+    source="arXiv:2407.10671",
+    notes="GQA kv=8, QKV bias",
+)

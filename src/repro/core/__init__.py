@@ -1,0 +1,11 @@
+"""EmptyHeaded core: datalog -> GHD plans -> worst-case-optimal joins.
+
+Public surface:
+  * :class:`repro.core.engine.Engine` — load relations, run datalog.
+  * :mod:`repro.core.ghd` — GHD search (the paper's logical plans).
+  * :mod:`repro.core.gj` — vectorized Generic-Join (NPRR) executor.
+  * :mod:`repro.core.layouts` — the uint/bitset set-layout optimizer.
+  * :mod:`repro.core.semiring` — aggregation algebra (Green et al.).
+"""
+from repro.core.engine import Engine, QueryResult  # noqa: F401
+from repro.core.trie import CSRGraph, Trie  # noqa: F401

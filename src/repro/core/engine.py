@@ -1,0 +1,313 @@
+"""The EmptyHeaded engine facade (paper Figure 1).
+
+``Engine`` wires the three phases together:
+
+  1. query compiler — datalog text -> GHD logical plan (``core.compile``),
+  2. code generation — GHD -> executable joins (``core.codegen`` emits
+     Python source; the plan interpreter in ``core.executor`` is the
+     differential-testing twin),
+  3. execution engine — vectorized worst-case-optimal joins with
+     layout/algorithm decisions made from data characteristics.
+
+Multi-rule programs evaluate in order; Kleene-star rules run **naive**
+recursion (fixed iterations / float tolerance — PageRank) or **seminaive**
+recursion, selected automatically "if the aggregation is monotonically
+increasing or decreasing with a MIN or MAX operator" (paper Section 3.3 —
+SSSP), in which case only the delta relation is re-joined each round.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import codegen as codegen_mod
+from repro.core.compile import QueryPlan, compile_rule
+from repro.core.datalog import AggRef, Rule, eval_expr, parse
+from repro.core.executor import Catalog, Executor
+from repro.core.gj import GJResult
+from repro.core.semiring import AGG_TO_SEMIRING, MAX_MIN, MIN_PLUS
+from repro.core.trie import Trie
+
+
+@dataclasses.dataclass
+class QueryResult:
+    vars: Tuple[str, ...]
+    columns: Dict[str, np.ndarray]
+    annotation: Optional[np.ndarray]
+
+    @staticmethod
+    def from_gj(res: GJResult) -> "QueryResult":
+        return QueryResult(res.vars,
+                           {k: np.asarray(v) for k, v in res.columns.items()},
+                           np.asarray(res.annotation)
+                           if res.annotation is not None else None)
+
+    @property
+    def num_rows(self) -> int:
+        if self.vars:
+            return len(self.columns[self.vars[0]])
+        return 1
+
+    def scalar(self):
+        assert not self.vars, f"not a scalar result: vars={self.vars}"
+        return self.annotation
+
+    def as_dict(self) -> Dict[int, object]:
+        assert len(self.vars) == 1
+        keys = self.columns[self.vars[0]]
+        return dict(zip(keys.tolist(), self.annotation.tolist()))
+
+
+class Engine:
+    """Public API: load relations, run datalog programs."""
+
+    def __init__(self, use_ghd: bool = True, use_codegen: bool = True):
+        self.catalog = Catalog()
+        self.use_ghd = use_ghd
+        self.use_codegen = use_codegen
+        self.dictionary: Dict[object, int] = {}
+        self.last_plan: Optional[QueryPlan] = None
+        self.last_source: Optional[str] = None
+        # plan cache: the GHD search is brute-force (NP-hard in #attrs) and
+        # the paper excludes compilation from query timing — repeated
+        # queries reuse the compiled plan
+        self._plan_cache: Dict[Tuple[str, bool], QueryPlan] = {}
+
+    # ----------------------------------------------------------------- load
+    def load_edges(self, name: str, src, dst, annotation=None):
+        src = np.asarray(src)
+        dst = np.asarray(dst)
+        t = Trie.build(name, ("c0", "c1"), [src, dst], annotation=annotation)
+        self.catalog.add(name, t)
+        return t
+
+    def load_table(self, name: str, columns: Sequence[np.ndarray],
+                   annotation=None):
+        attrs = tuple(f"c{i}" for i in range(len(columns)))
+        t = Trie.build(name, attrs, list(columns), annotation=annotation)
+        self.catalog.add(name, t)
+        return t
+
+    def alias(self, name: str, target: str):
+        self.catalog.alias(name, target)
+
+    def set_dictionary(self, mapping: Dict[object, int]):
+        self.dictionary = dict(mapping)
+
+    def encode(self, value) -> int:
+        if isinstance(value, (int, np.integer)):
+            return int(value)
+        return int(self.dictionary[value])
+
+    # ---------------------------------------------------------------- query
+    def query(self, text: str) -> QueryResult:
+        """Run a datalog program; returns the result of the LAST head."""
+        prog = parse(text)
+        result: Optional[QueryResult] = None
+        for i, rule in enumerate(prog.rules):
+            is_star_base = (rule.recursion is None and
+                            any(r.recursion is not None and
+                                r.head.rel == rule.head.rel
+                                for r in prog.rules[i + 1:]))
+            if rule.recursion is not None:
+                result = self._eval_recursive(rule)
+            else:
+                result = self._eval_rule(rule, materialize=True or is_star_base)
+        assert result is not None, "empty program"
+        return result
+
+    def explain(self, text: str) -> str:
+        prog = parse(text)
+        out = []
+        for rule in prog.rules:
+            plan = self._compile(rule)
+            out.append(plan.pretty())
+        return "\n".join(out)
+
+    def generated_source(self) -> Optional[str]:
+        return self.last_source
+
+    # ------------------------------------------------------------ internals
+    def _compile(self, rule: Rule) -> QueryPlan:
+        key = (repr(rule), self.use_ghd)
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            plan = compile_rule(rule, use_ghd=self.use_ghd)
+            if plan.semiring is not None and plan.needs_top_down:
+                plan = compile_rule(rule, use_ghd=False)
+            self._plan_cache[key] = plan
+        self.last_plan = plan
+        return plan
+
+    def _execute(self, plan: QueryPlan) -> GJResult:
+        if self.use_codegen:
+            fn, src = codegen_mod.emit(plan)
+            self.last_source = src
+            return fn(self.catalog, self.encode)
+        ex = Executor(self.catalog, self.encode)
+        return ex.run(plan)
+
+    def _eval_rule(self, rule: Rule, materialize: bool) -> QueryResult:
+        agg = rule.agg
+        if agg is not None and agg.op == "count" and agg.arg != "*":
+            res = self._eval_count_distinct(rule, agg)
+        else:
+            plan = self._compile(rule)
+            res = QueryResult.from_gj(self._execute(plan))
+        if materialize:
+            self._materialize_head(rule, res)
+        return res
+
+    def _eval_count_distinct(self, rule: Rule, agg: AggRef) -> QueryResult:
+        """COUNT(v) = number of DISTINCT v per output group: evaluate the
+        body with output keyvars+{v} under set semantics, then group-count."""
+        ext_out = tuple(rule.head.keyvars) + ((agg.arg,)
+                                              if agg.arg not in rule.head.keyvars else ())
+        sub = dataclasses.replace(
+            rule,
+            head=dataclasses.replace(rule.head, keyvars=ext_out),
+            agg_expr=None)
+        plan = self._compile(sub)
+        res = self._execute(plan)
+        keyvars = tuple(rule.head.keyvars)
+        if not keyvars:
+            count = np.asarray(res.num_rows, dtype=np.int64)
+            value = eval_expr(rule.agg_expr, count, self.catalog.scalars)
+            return QueryResult((), {}, np.asarray(value))
+        keys = np.stack([np.asarray(res.columns[v]) for v in keyvars], axis=1)
+        uniq, inv = np.unique(keys, axis=0, return_inverse=True)
+        counts = np.bincount(inv, minlength=len(uniq))
+        value = eval_expr(rule.agg_expr, counts, self.catalog.scalars)
+        cols = {v: uniq[:, i].astype(np.int32) for i, v in enumerate(keyvars)}
+        return QueryResult(keyvars, cols, np.asarray(value))
+
+    def _materialize_head(self, rule: Rule, res: QueryResult):
+        name = rule.head.rel
+        if not rule.head.keyvars:
+            if res.annotation is not None:
+                self.catalog.scalars[name] = np.asarray(res.annotation).item() \
+                    if np.asarray(res.annotation).ndim == 0 else res.annotation
+            return
+        cols = [res.columns[v] for v in rule.head.keyvars]
+        t = Trie.build(name, tuple(rule.head.keyvars), cols,
+                       annotation=res.annotation)
+        self.catalog.add(name, t)
+
+    # ------------------------------------------------------------ recursion
+    def _eval_recursive(self, rule: Rule) -> QueryResult:
+        agg = rule.agg
+        sr = AGG_TO_SEMIRING[agg.op] if agg is not None else None
+        seminaive = sr in (MIN_PLUS, MAX_MIN)
+        if seminaive:
+            return self._seminaive(rule, sr)
+        return self._naive(rule)
+
+    def _naive(self, rule: Rule) -> QueryResult:
+        """Naive recursion: re-evaluate the body against the full current
+        relation each round (paper: used for PageRank)."""
+        rec = rule.recursion
+        iters = int(rec.value) if rec.kind == "iterations" else None
+        tol = float(rec.value) if rec.kind == "tolerance" else None
+        max_iters = iters if iters is not None else 10_000
+        name = rule.head.rel
+        keyvars = tuple(rule.head.keyvars)
+        prev = self.catalog.get(name)
+        prev_keys = prev.levels[0].values.copy()
+        prev_ann = (prev.annotation.copy() if prev.annotation is not None
+                    else None)
+        assert len(keyvars) == 1, "naive recursion implemented for unary heads"
+
+        default = None
+        res = None
+        for it in range(max_iters):
+            res = self._eval_rule(rule_without_star(rule), materialize=False)
+            if default is None:
+                default = float(eval_expr(rule.agg_expr, np.zeros(1),
+                                          self.catalog.scalars)[0]) \
+                    if rule.agg_expr is not None else 0.0
+            # keys persist across iterations (head keys = initialized keys);
+            # missing keys fall back to expr(aggregate == zero).
+            new_ann = np.full(len(prev_keys), default, dtype=np.float64)
+            if res.num_rows and res.vars:
+                lookup = np.searchsorted(prev_keys, res.columns[keyvars[0]])
+                lookup = np.clip(lookup, 0, len(prev_keys) - 1)
+                hit = prev_keys[lookup] == res.columns[keyvars[0]]
+                new_ann[lookup[hit]] = np.asarray(res.annotation)[hit]
+            if tol is not None and prev_ann is not None:
+                if float(np.max(np.abs(new_ann - prev_ann))) <= tol:
+                    prev_ann = new_ann
+                    break
+            prev_ann = new_ann
+            t = Trie.build(name, keyvars, [prev_keys], annotation=new_ann)
+            self.catalog.add(name, t)
+        t = Trie.build(name, keyvars, [prev_keys], annotation=prev_ann)
+        self.catalog.add(name, t)
+        return QueryResult(keyvars, {keyvars[0]: prev_keys}, prev_ann)
+
+    def _seminaive(self, rule: Rule, sr) -> QueryResult:
+        """Seminaive recursion: only the delta (tuples whose annotation
+        improved last round) re-joins (paper: used for SSSP)."""
+        name = rule.head.rel
+        keyvars = tuple(rule.head.keyvars)
+        assert len(keyvars) == 1, "seminaive implemented for unary heads"
+        base = self.catalog.get(name)
+        keys = base.levels[0].values.copy().astype(np.int64)
+        ann = np.asarray(base.annotation, dtype=np.float64).copy()
+
+        rec_atoms = [a for a in rule.body if a.rel == name]
+        assert len(rec_atoms) == 1, "exactly one recursive atom supported"
+        delta_name = f"@delta_{name}"
+        sub = rewrite_atom(rule_without_star(rule), name, delta_name)
+
+        delta_keys, delta_ann = keys, ann
+        zero = float(np.asarray(sr.zero))
+        add = {"min_plus": np.minimum, "max_min": np.maximum}[sr.name]
+        max_rounds = int(rule.recursion.value) if \
+            rule.recursion.kind == "iterations" else 1 << 30
+
+        rounds = 0
+        while len(delta_keys) and rounds < max_rounds:
+            rounds += 1
+            self.catalog.add(delta_name, Trie.build(
+                delta_name, keyvars, [delta_keys.astype(np.int32)],
+                annotation=delta_ann))
+            res = self._eval_rule(sub, materialize=False)
+            if not res.num_rows or not res.vars:
+                break
+            cand_keys = np.asarray(res.columns[sub.head.keyvars[0]],
+                                   dtype=np.int64)
+            cand_ann = np.asarray(res.annotation, dtype=np.float64)
+            # merge candidates into (keys, ann)
+            all_keys = np.concatenate([keys, cand_keys])
+            all_ann = np.concatenate([ann, cand_ann])
+            uniq, inv = np.unique(all_keys, return_inverse=True)
+            merged = np.full(len(uniq), zero, dtype=np.float64)
+            if sr.name == "min_plus":
+                np.minimum.at(merged, inv, all_ann)
+            else:
+                np.maximum.at(merged, inv, all_ann)
+            old = np.full(len(uniq), zero, dtype=np.float64)
+            pos = np.searchsorted(uniq, keys)
+            old[pos] = ann
+            improved = merged != old
+            delta_keys = uniq[improved]
+            delta_ann = merged[improved]
+            keys, ann = uniq, merged
+            t = Trie.build(name, keyvars, [keys.astype(np.int32)],
+                           annotation=ann)
+            self.catalog.add(name, t)
+        if delta_name in self.catalog.tries:
+            del self.catalog.tries[delta_name]
+        return QueryResult(keyvars, {keyvars[0]: keys.astype(np.int32)}, ann)
+
+
+def rule_without_star(rule: Rule) -> Rule:
+    return dataclasses.replace(rule, recursion=None)
+
+
+def rewrite_atom(rule: Rule, old: str, new: str) -> Rule:
+    body = tuple(dataclasses.replace(a, rel=new) if a.rel == old else a
+                 for a in rule.body)
+    return dataclasses.replace(rule, body=body)

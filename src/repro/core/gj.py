@@ -1,0 +1,326 @@
+"""Level-at-a-time (breadth-first) Generic-Join (paper Algorithm 1, adapted).
+
+The paper's Generic-Join is a tuple-at-a-time recursion — control-flow bound
+and unmappable to a TPU. The equivalent breadth-first formulation keeps the
+*frontier* of partial bindings as a struct-of-arrays and performs each
+attribute extension as ONE vectorized intersect-and-expand over the whole
+frontier:
+
+    for each attribute v in the global order:
+        for every frontier row, intersect the candidate sets contributed by
+        all relations whose next un-bound attribute is v  (min property:
+        the smallest candidate set seeds the chain, the others are probed
+        with branch-free binary search)
+        expand the frontier by the intersection results
+
+Early aggregation (the GHD payoff, Section 3.2): when the remaining
+attributes are all aggregated away, the engine switches to a *terminal fold*
+that never materializes the expansion — e.g. triangle counting folds
+|N(x) ∩ N(y)| per frontier row directly.
+
+Annotations follow Green et al. provenance semirings (`core.semiring`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import intersect as I
+from repro.core.semiring import COUNT, Semiring
+from repro.core.trie import Trie
+
+
+@dataclasses.dataclass
+class BoundAtom:
+    """One relation occurrence in a bag, with live trie-descent state."""
+
+    trie: Trie
+    vars: Tuple[str, ...]       # variables per attribute (post-selection)
+    depth: int = 0              # how many attributes already bound
+    # cursor: absolute positions into levels[depth-1].values per frontier row
+    cursor: Optional[np.ndarray] = None
+
+    def next_var(self) -> Optional[str]:
+        return self.vars[self.depth] if self.depth < len(self.vars) else None
+
+    def candidate_bounds(self, frontier_len: int):
+        """Per-row (lo, hi) bounds of this relation's candidate set."""
+        lv = self.trie.levels[self.depth]
+        if self.depth == 0:
+            lo = np.zeros(frontier_len, dtype=np.int64)
+            hi = np.full(frontier_len, len(lv.values), dtype=np.int64)
+        else:
+            lo = lv.offsets[self.cursor]
+            hi = lv.offsets[self.cursor + 1]
+        return lv.values, lo, hi
+
+    def annotation_at_leaf(self) -> Optional[np.ndarray]:
+        return self.trie.annotation
+
+
+@dataclasses.dataclass
+class GJResult:
+    vars: Tuple[str, ...]
+    columns: Dict[str, np.ndarray]
+    annotation: Optional[np.ndarray]  # semiring elements, None if no agg
+
+    @property
+    def num_rows(self) -> int:
+        if not self.vars:
+            return 1 if self.annotation is not None and self.annotation.ndim == 0 else (
+                len(self.annotation) if self.annotation is not None else 1)
+        return len(next(iter(self.columns.values())))
+
+    def scalar(self):
+        assert not self.vars
+        return self.annotation
+
+
+def _dtype_of(sr: Semiring):
+    import jax.numpy as _jnp
+    return np.dtype(_jnp.zeros((), sr.dtype).dtype)
+
+
+class GenericJoin:
+    """Vectorized worst-case-optimal join over one GHD bag."""
+
+    def __init__(self, atoms: Sequence[Tuple[Trie, Sequence[str]]],
+                 var_order: Sequence[str],
+                 output_vars: Sequence[str],
+                 semiring: Optional[Semiring] = None,
+                 selections: Optional[Dict[int, Dict[int, int]]] = None):
+        """
+        atoms: (trie, vars) pairs; trie attr order must equal the global order
+          restricted to its vars (callers re-index via Trie.reorder).
+        var_order: bag-local global attribute order.
+        output_vars: χ(t) — retained attributes (prefix of var_order is NOT
+          required; non-retained attrs are folded with the semiring or
+          deduped away).
+        semiring: fold algebra for projected-away attributes; None = set
+          semantics (dedup).
+        selections: atom_idx -> {attr_pos: constant} equality selections.
+        """
+        self.var_order = tuple(var_order)
+        self.output_vars = tuple(output_vars)
+        self.semiring = semiring
+        self.atoms: List[BoundAtom] = []
+        selections = selections or {}
+        for i, (trie, vars_) in enumerate(atoms):
+            sel = selections.get(i, {})
+            self.atoms.append(self._prebind(trie, tuple(vars_), sel))
+        for a in self.atoms:
+            # check induced-order consistency on live (unselected) variables
+            pos = [self.var_order.index(v) for v in a.vars[a.depth:]]
+            assert pos == sorted(pos), (
+                f"trie order {a.vars} inconsistent with global {self.var_order}")
+
+    @staticmethod
+    def _prebind(trie: Trie, vars_: Tuple[str, ...], sel: Dict[int, int]) -> BoundAtom:
+        """Apply equality selections by descending the trie at constants.
+
+        Constants must be a prefix of the attribute order (the compiler
+        reorders tries so selections lead). Produces an atom whose cursor is
+        pinned at the selected subtree (or an empty relation)."""
+        if not sel:
+            return BoundAtom(trie, vars_)
+        assert sorted(sel.keys()) == list(range(len(sel))), \
+            "selections must be on a prefix of the trie order"
+        depth = 0
+        cursor = None  # scalar position during prebind
+        for pos in range(len(sel)):
+            lv = trie.levels[pos]
+            if pos == 0:
+                lo, hi = 0, len(lv.values)
+            else:
+                lo, hi = int(lv.offsets[cursor]), int(lv.offsets[cursor + 1])
+            c = sel[pos]
+            p = lo + int(np.searchsorted(lv.values[lo:hi], c))
+            if p >= hi or lv.values[p] != c:
+                # empty selection: an empty trie over the live suffix, so the
+                # first live variable's extension yields an empty frontier.
+                live = vars_[len(sel):]
+                k = max(1, len(live))
+                empty = Trie.build(trie.name, trie.attrs[len(sel):] or ("_",),
+                                   [np.zeros(0, np.int32)] * k)
+                return BoundAtom(empty, live or ("_",), depth=0, cursor=None)
+            cursor = p
+            depth += 1
+        # vars_ keeps one name per trie attribute; selected positions carry
+        # "$sel<i>" placeholders injected by the compiler, never in var_order.
+        return BoundAtom(trie, vars_, depth=depth,
+                         cursor=np.array([cursor], dtype=np.int64))
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> GJResult:
+        sr = self.semiring
+        F = 1
+        frontier: Dict[str, np.ndarray] = {}
+        ann = sr.lift(1) if sr is not None else None
+        ann = np.asarray(ann) if ann is not None else None
+        atoms = self.atoms
+        # broadcast pre-bound cursors to frontier length 1
+        for a in atoms:
+            if a.cursor is not None and len(a.cursor) != F:
+                a.cursor = np.broadcast_to(a.cursor, (F,)).copy()
+
+        out_set = set(self.output_vars)
+        for vi, v in enumerate(self.var_order):
+            cons = [a for a in atoms if a.next_var() == v]
+            assert cons, f"variable {v} unconstrained at its turn"
+            remaining = self.var_order[vi + 1:]
+            # Early-aggregation fast path: the last attribute, not retained,
+            # folds without materializing (e.g. |N(x) ∩ N(y)| for triangles).
+            terminal = sr is not None and v not in out_set and not remaining
+            if terminal:
+                fold, support = self._terminal_fold(cons, F)
+                ann = sr.mul(ann, fold) if ann is not None else fold
+                ann = np.asarray(ann)
+                # rows with an EMPTY candidate intersection are NOT derived
+                # (folding them to the semiring identity would leak e.g.
+                # dist=inf tuples out of SSSP — caught by Table 7)
+                if not support.all():
+                    keep = np.flatnonzero(support)
+                    frontier = {k: col[keep] for k, col in frontier.items()}
+                    for a in atoms:
+                        if a.cursor is not None and a not in cons:
+                            a.cursor = a.cursor[keep]
+                    ann = ann[keep]
+                    F = len(keep)
+                # frontier unchanged otherwise; v folded away
+                continue
+            row_id, vals, pos = self._extend(cons, F)
+            # rebuild frontier
+            frontier = {k: col[row_id] for k, col in frontier.items()}
+            frontier[v] = vals
+            for a in atoms:
+                if a in cons:
+                    a.cursor = pos[id(a)]
+                    a.depth += 1
+                elif a.cursor is not None:
+                    a.cursor = a.cursor[row_id]
+            if ann is not None:
+                ann = ann[row_id]
+            # multiply in annotations of atoms that just exhausted their attrs
+            if sr is not None:
+                for a in cons:
+                    if a.depth == len(a.trie.attrs) and a.trie.annotation is not None:
+                        ann = sr.mul(ann, a.trie.annotation[a.cursor])
+            F = len(vals)
+            if F == 0:
+                # empty join: emit an empty result with all output columns
+                empty_cols = {k: np.zeros(0, np.int32) for k in self.output_vars}
+                empty_ann = None
+                if sr is not None:
+                    if self.output_vars:
+                        empty_ann = np.zeros(0, _dtype_of(sr))
+                    else:
+                        empty_ann = np.asarray(sr.zero, dtype=_dtype_of(sr))
+                return GJResult(self.output_vars, empty_cols, empty_ann)
+
+        # ---------------- project to output vars
+        cols = {k: frontier[k] for k in self.output_vars if k in frontier}
+        extra = [k for k in frontier if k not in out_set]
+        if not extra and len(cols) == len(self.output_vars):
+            return GJResult(self.output_vars, cols,
+                            np.asarray(ann) if ann is not None else None)
+        # group-by output vars, folding ann (or dedup)
+        return self._project(cols, ann, F)
+
+    # ------------------------------------------------------------ internals
+    def _extend(self, cons: List[BoundAtom], F: int):
+        """Intersect candidates of ``cons`` per frontier row; materialize."""
+        # seed with the relation with the smallest total candidate mass
+        infos = []
+        for a in cons:
+            values, lo, hi = a.candidate_bounds(F)
+            infos.append((a, values, lo, hi, int((hi - lo).sum())))
+        infos.sort(key=lambda t: t[4])
+        a0, v0, lo0, hi0, _ = infos[0]
+        cnt = (hi0 - lo0).astype(np.int64)
+        row_id = np.repeat(np.arange(F, dtype=np.int64), cnt)
+        seg_start = np.repeat(np.concatenate([[0], np.cumsum(cnt)])[:-1], cnt)
+        flat = np.arange(len(row_id), dtype=np.int64)
+        p0 = np.repeat(lo0, cnt) + (flat - seg_start)
+        vals = v0[p0]
+        pos = {id(a0): p0}
+        for a, values, lo, hi, _m in infos[1:]:
+            p, found = I.segment_searchsorted(values, lo[row_id], hi[row_id], vals)
+            p = np.asarray(p); found = np.asarray(found)
+            keep = found
+            row_id = row_id[keep]
+            vals = vals[keep]
+            for k in pos:
+                pos[k] = pos[k][keep]
+            pos[id(a)] = p[keep]
+        return row_id, vals, pos
+
+    def _terminal_fold(self, cons: List[BoundAtom], F: int):
+        """Fold the last attribute without materializing the expansion.
+
+        COUNT with no annotations on 2 relations is the common case
+        (triangle counting): per-row intersection count. General case:
+        materialize the per-row intersection *locally*, gather annotations,
+        segment-reduce back to rows.
+
+        Returns (folded [F], support [F] bool) — support marks rows whose
+        candidate intersection was non-empty (only those are derived).
+        """
+        sr = self.semiring
+        assert sr is not None
+        has_ann = any(a.trie.annotation is not None for a in cons)
+        if sr is COUNT and not has_ann:
+            counts = self._fold_count(cons, F)
+            return counts, counts > 0
+        row_id, vals, pos = self._extend(cons, F)
+        contrib = sr.lift(len(vals))
+        contrib = np.asarray(contrib)
+        for a in cons:
+            if a.trie.annotation is not None and a.depth + 1 == len(a.trie.attrs):
+                contrib = np.asarray(sr.mul(contrib, a.trie.annotation[pos[id(a)]]))
+        folded = np.asarray(sr.segment_reduce(contrib, row_id.astype(np.int32), F))
+        support = np.bincount(row_id, minlength=F) > 0
+        return folded, support
+
+    def _fold_count(self, cons: List[BoundAtom], F: int) -> np.ndarray:
+        if len(cons) == 1:
+            a, (values, lo, hi) = cons[0], cons[0].candidate_bounds(F)
+            return (hi - lo).astype(np.int64)
+        if len(cons) == 2:
+            a, b = cons
+            # Binary self-join terminal (the triangle hot path): route
+            # through the set-level layout optimizer — bitset cohort pairs
+            # take the AND+popcount kernel, sparse pairs the lockstep
+            # search (paper Section 4; layout mode via layouts.engine_*).
+            if (a.trie is b.trie and a.trie.arity == 2
+                    and a.depth == 1 and b.depth == 1
+                    and a.cursor is not None and b.cursor is not None):
+                from repro.core.layouts import engine_store_for
+                store = engine_store_for(a.trie)
+                if store is not None:
+                    u = a.trie.levels[0].values[a.cursor].astype(np.int64)
+                    v = b.trie.levels[0].values[b.cursor].astype(np.int64)
+                    return store.intersect_count(u, v)
+        # chain: materialize smallest two's intersection per row, count others
+        row_id, vals, _pos = self._extend(cons, F)
+        return np.bincount(row_id, minlength=F).astype(np.int64)
+
+    def _project(self, cols: Dict[str, np.ndarray], ann, F: int) -> GJResult:
+        sr = self.semiring
+        if not self.output_vars:
+            if sr is None:
+                return GJResult((), {}, None)
+            total = np.asarray(sr.segment_reduce(
+                np.asarray(ann), np.zeros(F, np.int32), 1))[0]
+            return GJResult((), {}, np.asarray(total))
+        key_cols = [cols[k] for k in self.output_vars]
+        stacked = np.stack(key_cols, axis=1)
+        uniq, inv = np.unique(stacked, axis=0, return_inverse=True)
+        out_cols = {k: uniq[:, i].astype(np.int32)
+                    for i, k in enumerate(self.output_vars)}
+        if sr is None:
+            return GJResult(self.output_vars, out_cols, None)
+        folded = np.asarray(sr.segment_reduce(np.asarray(ann),
+                                              inv.astype(np.int32), len(uniq)))
+        return GJResult(self.output_vars, out_cols, folded)

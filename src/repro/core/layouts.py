@@ -1,0 +1,208 @@
+"""Set-layout selection (paper Section 4.1/4.3/4.4, Algorithm 3).
+
+EmptyHeaded chooses, **per set**, between the ``uint`` layout (sorted 32-bit
+array) and the ``bitset`` layout (offset + bitvector blocks), using the rule
+of Algorithm 3::
+
+    inverse_density = S.range / |S|
+    bitset  if inverse_density < SIMD_register_size else uint
+
+The paper studied relation-/set-/block-level granularity against an oracle
+(Table 4) and found set-level best; we reproduce that study in
+``benchmarks/table4_layout_oracle.py``.
+
+TPU adaptation: per-set dynamic dispatch inside one kernel launch is not
+TPU-idiomatic (kernels want uniform tiles), so the same *decision* is executed
+at batch granularity: sets are partitioned into a **dense cohort** (rendered
+into the blocked-bitset layout) and a **sparse cohort** (kept in CSR/uint),
+and intersections are routed to the (bitset×bitset | uint×bitset | uint×uint)
+kernel by cohort membership. The decision rule is Algorithm 3 verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import intersect as I
+from repro.core.trie import CSRGraph
+
+# Paper default: the width of an AVX register (256). TPU-native block size is
+# one VREG row of int32 lanes (128 lanes * 32 bits = 4096); both supported.
+SIMD_REGISTER_BITS = 256
+TPU_VREG_BITS = 4096
+
+
+@dataclasses.dataclass
+class LayoutDecision:
+    """Outcome of the set-level optimizer over a CSR adjacency."""
+
+    dense_ids: np.ndarray    # node ids whose sets use the bitset layout
+    sparse_ids: np.ndarray   # node ids whose sets stay uint
+    inverse_density: np.ndarray  # per-node range/|S| (inf for empty)
+    threshold: float
+
+
+def set_ranges(csr: CSRGraph) -> np.ndarray:
+    """Per-set value range (max - min + 1); 0 for empty sets."""
+    n = csr.n
+    deg = csr.degrees
+    lo = np.zeros(n, dtype=np.int64)
+    hi = np.zeros(n, dtype=np.int64)
+    nz = deg > 0
+    starts = csr.offsets[:-1][nz]
+    ends = csr.offsets[1:][nz] - 1
+    lo[nz] = csr.neighbors[starts]
+    hi[nz] = csr.neighbors[ends]
+    rng = np.zeros(n, dtype=np.int64)
+    rng[nz] = hi[nz] - lo[nz] + 1
+    return rng
+
+
+def decide_set_level(csr: CSRGraph, threshold: float = SIMD_REGISTER_BITS) -> LayoutDecision:
+    """Algorithm 3, applied to every set of the relation."""
+    deg = csr.degrees
+    rng = set_ranges(csr)
+    inv = np.full(csr.n, np.inf)
+    nz = deg > 0
+    inv[nz] = rng[nz] / deg[nz]
+    dense = nz & (inv < threshold)
+    return LayoutDecision(
+        dense_ids=np.flatnonzero(dense).astype(np.int64),
+        sparse_ids=np.flatnonzero(nz & ~dense).astype(np.int64),
+        inverse_density=inv,
+        threshold=threshold,
+    )
+
+
+def decide_relation_level(csr: CSRGraph, force: str = "uint") -> LayoutDecision:
+    """Relation-level granularity: one layout for every set (Table 4 row 1)."""
+    nz = csr.degrees > 0
+    ids = np.flatnonzero(nz).astype(np.int64)
+    empty = np.zeros(0, dtype=np.int64)
+    if force == "uint":
+        return LayoutDecision(empty, ids, np.full(csr.n, np.inf), 0.0)
+    return LayoutDecision(ids, empty, np.zeros(csr.n), np.inf)
+
+
+# ----------------------------------------------------------- engine routing
+# Layout mode for the execution engine's terminal intersections:
+#   "set"  — Algorithm-3 set-level decisions (paper default)
+#   "uint" — relation-level all-uint ("-R" ablation)
+#   "off"  — bypass the store (plain search path)
+_ENGINE_LAYOUT_MODE = "set"
+
+
+def set_engine_layout_mode(mode: str):
+    global _ENGINE_LAYOUT_MODE
+    assert mode in ("set", "uint", "off"), mode
+    _ENGINE_LAYOUT_MODE = mode
+
+
+def engine_store_for(trie) -> Optional["HybridSetStore"]:
+    """Per-trie cached HybridSetStore for the engine's binary terminal
+    folds (built lazily on first use; index build time is excluded from
+    query timing, as in the paper)."""
+    if _ENGINE_LAYOUT_MODE == "off":
+        return None
+    cached = getattr(trie, "_hybrid_store", None)
+    if cached is not None and cached[0] == _ENGINE_LAYOUT_MODE:
+        return cached[1]
+    csr = CSRGraph.from_trie(trie)
+    if _ENGINE_LAYOUT_MODE == "uint":
+        store = HybridSetStore.build(
+            csr, decision=decide_relation_level(csr, "uint"))
+    else:
+        store = HybridSetStore.build(csr)
+    trie._hybrid_store = (_ENGINE_LAYOUT_MODE, store)
+    return store
+
+
+@dataclasses.dataclass
+class HybridSetStore:
+    """The execution-engine view of one relation's second trie level:
+    CSR for the sparse cohort + blocked bitset for the dense cohort, with a
+    router that dispatches pairwise intersections to the right kernel.
+    """
+
+    csr: CSRGraph
+    decision: LayoutDecision
+    bitset: Optional[I.BlockedBitset]
+    # injected word-AND-popcount (the Pallas kernel), None -> pure jnp
+    word_kernel: Optional[Callable] = None
+
+    @staticmethod
+    def build(csr: CSRGraph, threshold: float = SIMD_REGISTER_BITS,
+              block_bits: int = SIMD_REGISTER_BITS,
+              word_kernel: Optional[Callable] = None,
+              decision: Optional[LayoutDecision] = None) -> "HybridSetStore":
+        d = decision if decision is not None else decide_set_level(csr, threshold)
+        bs = None
+        if len(d.dense_ids):
+            bs = I.build_blocked_bitset(csr.offsets, csr.neighbors,
+                                        d.dense_ids, csr.n, block_bits)
+        return HybridSetStore(csr, d, bs, word_kernel)
+
+    def stats(self) -> dict:
+        d = self.decision
+        return {
+            "n_dense": int(len(d.dense_ids)),
+            "n_sparse": int(len(d.sparse_ids)),
+            "frac_dense": float(len(d.dense_ids)) / max(1, len(d.dense_ids) + len(d.sparse_ids)),
+            "bitset_bytes": int(self.bitset.nbytes()) if self.bitset else 0,
+            "csr_bytes": int(self.csr.neighbors.nbytes + self.csr.offsets.nbytes),
+        }
+
+    # ------------------------------------------------------------- dispatch
+    def intersect_count(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+        """|N(u_i) ∩ N(v_i)| routed per-pair by the cohort of each endpoint.
+
+        Routing: both dense -> bitset∩bitset; one dense -> uint∩bitset
+        (probe the sparse side into the dense side — min property); both
+        sparse -> hybrid uint search.
+        """
+        u = np.asarray(u, dtype=np.int64)
+        v = np.asarray(v, dtype=np.int64)
+        out = np.zeros(len(u), dtype=np.int64)
+        if len(u) == 0:
+            return out
+        if self.bitset is None:
+            return I.intersect_count_uint(self.csr.offsets, self.csr.neighbors, u, v)
+        slot = self.bitset.slot_of
+        ud = slot[u] >= 0
+        vd = slot[v] >= 0
+
+        both_d = ud & vd
+        if both_d.any():
+            idx = np.flatnonzero(both_d)
+            out[idx] = I.bitset_intersect_count(
+                self.bitset, slot[u[idx]], slot[v[idx]], self.word_kernel)
+
+        mixed = ud ^ vd
+        if mixed.any():
+            idx = np.flatnonzero(mixed)
+            uu, vv = u[idx], v[idx]
+            sparse_side = np.where(ud[idx], vv, uu)
+            dense_side = np.where(ud[idx], uu, vv)
+            out[idx] = I.uint_bitset_intersect_count(
+                self.csr.offsets, self.csr.neighbors, sparse_side,
+                self.bitset, slot[dense_side])
+
+        both_s = ~(ud | vd)
+        if both_s.any():
+            idx = np.flatnonzero(both_s)
+            out[idx] = I.intersect_count_uint(
+                self.csr.offsets, self.csr.neighbors, u[idx], v[idx])
+        return out
+
+    def intersect_materialize(self, u: np.ndarray, v: np.ndarray):
+        """Materializing intersection (pair_id, value). Used for non-terminal
+        attributes where the engine must descend further. Falls back to the
+        uint path for all cohorts (positions are needed for trie descent; the
+        bitset layout's `index` field supports it but the uint path is used
+        for correctness-primary materialization)."""
+        pair_id, vals, _, _ = I.intersect_pairs_uint(
+            self.csr.offsets, self.csr.neighbors,
+            np.asarray(u, np.int64), np.asarray(v, np.int64))
+        return pair_id, vals

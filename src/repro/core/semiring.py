@@ -1,0 +1,146 @@
+"""Semiring annotations (Green et al., provenance semirings).
+
+EmptyHeaded annotates trie values with elements of a commutative semiring
+``(K, add, mul, zero, one)`` and folds annotations during projection — this is
+what makes early aggregation (Section 3.2 of the paper) a *logical* plan
+property rather than an executor special case.
+
+The same structures double as the message-passing aggregators of the GNN
+substrate (a GCN layer is a (+,*) join-aggregate; SSSP is (min,+)): the
+paper's thesis that "graph processing is relational algebra" is realized by
+sharing this module between ``repro.core`` and ``repro.models.gnn``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A commutative semiring with a vectorized segment reduction.
+
+    Attributes:
+      name: human-readable id.
+      dtype: canonical dtype for annotation arrays.
+      zero: additive identity (scalar).
+      one: multiplicative identity (scalar).
+      add: elementwise ``a (+) b``.
+      mul: elementwise ``a (*) b``.
+      segment_reduce: ``(data, segment_ids, num_segments) -> reduced`` — the
+        vectorized fold of ``add`` by key; maps onto jax.ops.segment_*.
+    """
+
+    name: str
+    dtype: Any
+    zero: Any
+    one: Any
+    add: Callable[[Array, Array], Array]
+    mul: Callable[[Array, Array], Array]
+    segment_reduce: Callable[[Array, Array, int], Array]
+
+    def lift(self, n: int, value: Any = None) -> Array:
+        """An annotation vector of length ``n`` filled with ``one`` (or value)."""
+        fill = self.one if value is None else value
+        return jnp.full((n,), fill, dtype=self.dtype)
+
+    def total(self, data: Array) -> Array:
+        """Fold a whole annotation vector with ``add``."""
+        zeros = jnp.zeros((data.shape[0],), dtype=jnp.int32)
+        return self.segment_reduce(data, zeros, 1)[0]
+
+
+def _seg_sum(data, seg, n):
+    return jax.ops.segment_sum(data, seg, num_segments=n)
+
+
+def _seg_min(data, seg, n):
+    return jax.ops.segment_min(data, seg, num_segments=n)
+
+
+def _seg_max(data, seg, n):
+    return jax.ops.segment_max(data, seg, num_segments=n)
+
+
+def _seg_or(data, seg, n):
+    return jax.ops.segment_max(data.astype(jnp.int32), seg, num_segments=n).astype(jnp.bool_)
+
+
+COUNT = Semiring(
+    name="count",
+    dtype=jnp.int64 if jax.config.jax_enable_x64 else jnp.int32,
+    zero=0,
+    one=1,
+    add=lambda a, b: a + b,
+    mul=lambda a, b: a * b,
+    segment_reduce=_seg_sum,
+)
+
+SUM_F32 = Semiring(
+    name="sum_f32",
+    dtype=jnp.float32,
+    zero=0.0,
+    one=1.0,
+    add=lambda a, b: a + b,
+    mul=lambda a, b: a * b,
+    segment_reduce=_seg_sum,
+)
+
+SUM_F64 = Semiring(
+    name="sum_f64",
+    dtype=jnp.float64,
+    zero=0.0,
+    one=1.0,
+    add=lambda a, b: a + b,
+    mul=lambda a, b: a * b,
+    segment_reduce=_seg_sum,
+)
+
+# Tropical / shortest-path semiring: add = min, mul = +.
+MIN_PLUS = Semiring(
+    name="min_plus",
+    dtype=jnp.float32,
+    zero=np.float32(np.inf),
+    one=0.0,
+    add=jnp.minimum,
+    mul=lambda a, b: a + b,
+    segment_reduce=_seg_min,
+)
+
+# Bottleneck semiring: add = max, mul = min.
+MAX_MIN = Semiring(
+    name="max_min",
+    dtype=jnp.float32,
+    zero=np.float32(-np.inf),
+    one=np.float32(np.inf),
+    add=jnp.maximum,
+    mul=jnp.minimum,
+    segment_reduce=_seg_max,
+)
+
+BOOLEAN = Semiring(
+    name="boolean",
+    dtype=jnp.bool_,
+    zero=False,
+    one=True,
+    add=jnp.logical_or,
+    mul=jnp.logical_and,
+    segment_reduce=_seg_or,
+)
+
+BY_NAME = {s.name: s for s in (COUNT, SUM_F32, SUM_F64, MIN_PLUS, MAX_MIN, BOOLEAN)}
+
+# Aggregation-syntax name (<<SUM(x)>> etc.) -> semiring used to fold it.
+AGG_TO_SEMIRING = {
+    "count": COUNT,
+    "sum": SUM_F32,
+    "min": MIN_PLUS,
+    "max": MAX_MIN,
+    "or": BOOLEAN,
+}

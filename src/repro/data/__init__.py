@@ -1,0 +1,9 @@
+"""Data pipeline substrate: synthetic graph generators (power-law /
+Kronecker / molecule batches), a fanout neighbor sampler for minibatch GNN
+training, an LM token pipeline, and recsys batch generation."""
+from repro.data.graphs import (  # noqa: F401
+    kronecker_graph, molecule_batch, powerlaw_graph, random_features,
+)
+from repro.data.sampler import NeighborSampler  # noqa: F401
+from repro.data.lm import TokenPipeline  # noqa: F401
+from repro.data.recsys import RecsysBatchGen  # noqa: F401

@@ -1,0 +1,73 @@
+"""Fanout neighbor sampler (GraphSAGE-style) for ``minibatch_lg`` training.
+
+Produces fixed-shape (padded) k-hop samples so the sampled subgraph feeds a
+jit-compiled GNN step without retracing: each hop gathers up to ``fanout[h]``
+neighbors per frontier node (with replacement when deg > 0, self-loop padding
+when deg == 0), emitting flat (senders, receivers) edge lists whose receiver
+side indexes the previous hop's frontier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.trie import CSRGraph
+
+
+@dataclasses.dataclass
+class SampledBlock:
+    """One hop: edges from sampled source nodes into the frontier."""
+
+    senders: np.ndarray     # [F * fanout] indices into ``nodes`` (next hop)
+    receivers: np.ndarray   # [F * fanout] indices into previous frontier
+    nodes: np.ndarray       # [F * fanout] global node ids of this hop (w/ dup)
+
+
+@dataclasses.dataclass
+class SampledBatch:
+    seeds: np.ndarray                 # [B] global seed node ids
+    blocks: List[SampledBlock]        # one per hop, frontier-outward
+    all_nodes: np.ndarray             # unique global ids touched
+
+
+class NeighborSampler:
+    """Fixed-fanout sampler over a CSR graph."""
+
+    def __init__(self, csr: CSRGraph, fanouts: Sequence[int] = (15, 10),
+                 seed: int = 0):
+        self.csr = csr
+        self.fanouts = tuple(fanouts)
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, seeds: np.ndarray) -> SampledBatch:
+        seeds = np.asarray(seeds, dtype=np.int64)
+        frontier = seeds
+        blocks: List[SampledBlock] = []
+        touched = [seeds]
+        for fanout in self.fanouts:
+            f = len(frontier)
+            deg = self.csr.degrees[frontier]
+            # sample ``fanout`` slots per frontier node (with replacement);
+            # zero-degree nodes self-loop.
+            r = self.rng.integers(0, 1 << 62, size=(f, fanout))
+            slot = np.where(deg[:, None] > 0, r % np.maximum(deg, 1)[:, None], 0)
+            base = self.csr.offsets[frontier]
+            idx = base[:, None] + slot
+            nodes = np.where(deg[:, None] > 0,
+                             self.csr.neighbors[idx.astype(np.int64)],
+                             frontier[:, None]).astype(np.int64)
+            senders = np.arange(f * fanout, dtype=np.int64)
+            receivers = np.repeat(np.arange(f, dtype=np.int64), fanout)
+            blocks.append(SampledBlock(senders, receivers, nodes.reshape(-1)))
+            frontier = nodes.reshape(-1)
+            touched.append(frontier)
+        return SampledBatch(seeds, blocks, np.unique(np.concatenate(touched)))
+
+    def batches(self, batch_nodes: int, epochs: int = 1):
+        """Yield seed batches covering all nodes (shuffled) per epoch."""
+        for _ in range(epochs):
+            perm = self.rng.permutation(self.csr.n)
+            for s in range(0, self.csr.n, batch_nodes):
+                yield self.sample(perm[s:s + batch_nodes])

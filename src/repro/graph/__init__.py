@@ -1,0 +1,6 @@
+"""Graph preprocessing substrate: dictionary encoding, node orderings,
+symmetric pruning, and skew statistics (paper Section 2.2 + Appendix C.2)."""
+from repro.graph.dictionary import Dictionary, encode_edges  # noqa: F401
+from repro.graph.ordering import ORDERINGS, apply_ordering, order_nodes  # noqa: F401
+from repro.graph.prune import prune_symmetric, symmetrize  # noqa: F401
+from repro.graph.stats import density_skew, graph_stats  # noqa: F401

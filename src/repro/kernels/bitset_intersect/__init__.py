@@ -1,0 +1,1 @@
+from repro.kernels.bitset_intersect.ops import bitset_and_popcount  # noqa: F401

@@ -1,0 +1,49 @@
+"""Jit'd public wrapper for the bitset-intersect kernel.
+
+``bitset_and_popcount(words, pos_a, pos_b)`` is the drop-in ``word_kernel``
+for :class:`repro.core.layouts.HybridSetStore`: it gathers the matched block
+rows (XLA gather), pads to hardware tile geometry, and runs the Pallas
+AND+popcount kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitset_intersect.kernel import bitset_and_popcount_kernel
+from repro.kernels.common import LANE, interpret_default, round_up
+
+_BLOCK_ROWS = 256
+
+
+def bitset_and_popcount(words, pos_a, pos_b, *, interpret=None):
+    """out[i] = |block[pos_a[i]] & block[pos_b[i]]| (popcount of the AND).
+
+    words : [B, W] uint32 bitvector blocks
+    pos_a, pos_b : [P] int indices into the block table
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    words = jnp.asarray(words)
+    pos_a = jnp.asarray(pos_a)
+    pos_b = jnp.asarray(pos_b)
+    p = pos_a.shape[0]
+    if p == 0:
+        return jnp.zeros((0,), jnp.int32)
+    w = words.shape[1]
+    wpad = round_up(max(w, LANE), LANE)
+    ppad = round_up(p, _BLOCK_ROWS)
+    wa = jnp.zeros((ppad, wpad), jnp.uint32).at[:p, :w].set(words[pos_a])
+    wb = jnp.zeros((ppad, wpad), jnp.uint32).at[:p, :w].set(words[pos_b])
+    out = bitset_and_popcount_kernel(wa, wb, block_rows=_BLOCK_ROWS,
+                                     interpret=interpret)
+    return out[:p]
+
+
+def as_word_kernel(interpret=None):
+    """Adapter matching HybridSetStore's ``word_kernel`` callable."""
+    def fn(words, pos_a, pos_b):
+        return np.asarray(bitset_and_popcount(words, pos_a, pos_b,
+                                              interpret=interpret))
+    return fn

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the bitset AND+popcount kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def popcount_u32(x):
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+@jax.jit
+def bitset_and_popcount_ref(wa, wb):
+    """out[i] = popcount(wa[i] & wb[i]) summed over words."""
+    return popcount_u32(wa & wb).sum(axis=1)

@@ -1,0 +1,45 @@
+"""Shared Pallas kernel utilities.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling). This container
+is CPU-only, so ``interpret_default()`` flips every kernel into interpret
+mode, which executes the kernel body in Python for correctness validation
+against the pure-jnp oracles in each kernel's ``ref.py``.
+
+TPU tiling notes (v5e): int32/float32 native VREG tile is (8, 128)
+(sublane, lane); bf16 is (16, 128). Block shapes below are multiples of the
+native tile so the MXU/VPU see hardware-aligned operands.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+# Native tile geometry for fp32/int32 operands.
+SUBLANE = 8
+LANE = 128
+
+
+def interpret_default() -> bool:
+    """True when no TPU is attached (kernel body runs in Python)."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def pad_axis(arr, axis: int, to: int, value=0):
+    """Pad ``arr`` along ``axis`` up to length ``to`` with ``value``."""
+    import jax.numpy as jnp
+
+    cur = arr.shape[axis]
+    if cur == to:
+        return arr
+    assert cur < to, (cur, to)
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, to - cur)
+    return jnp.pad(arr, widths, constant_values=value)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

@@ -1,0 +1,1 @@
+from repro.kernels.fm_interaction.ops import fm_interaction  # noqa: F401

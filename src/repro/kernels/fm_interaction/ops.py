@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the FM interaction kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, round_up
+from repro.kernels.fm_interaction.kernel import fm_interaction_kernel
+
+_BLOCK_ROWS = 128
+
+
+def fm_interaction(emb, *, interpret=None):
+    """0.5 * sum_d((sum_f e)^2 - sum_f e^2) per batch row. emb: [B, F, D]."""
+    if interpret is None:
+        interpret = interpret_default()
+    emb = jnp.asarray(emb, jnp.float32)
+    b, f, d = emb.shape
+    bpad = round_up(max(b, _BLOCK_ROWS), _BLOCK_ROWS)
+    if bpad != b:
+        emb = jnp.zeros((bpad, f, d), jnp.float32).at[:b].set(emb)
+    out = fm_interaction_kernel(emb, block_rows=_BLOCK_ROWS,
+                                interpret=interpret)
+    return out[:b]

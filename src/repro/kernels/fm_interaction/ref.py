@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the FM interaction kernel (both formulations)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def fm_interaction_ref(emb):
+    """Sum-square formulation (what the kernel computes)."""
+    s = emb.sum(axis=1)
+    sq = (emb * emb).sum(axis=1)
+    return 0.5 * (s * s - sq).sum(axis=1)
+
+
+@jax.jit
+def fm_interaction_pairwise_ref(emb):
+    """Naive O(F^2) pairwise formulation — independent oracle."""
+    g = jnp.einsum("bfd,bgd->bfg", emb, emb)
+    total = g.sum(axis=(1, 2))
+    diag = jnp.einsum("bfd,bfd->b", emb, emb)
+    return 0.5 * (total - diag)

@@ -1,0 +1,1 @@
+from repro.kernels.spmv_ell.ops import spmv_ell  # noqa: F401

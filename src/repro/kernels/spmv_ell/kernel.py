@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: ELL-format SpMV (PageRank's y = A^T x hot loop).
+
+PageRank in the engine is a (+, *) semiring join-aggregate over the edge
+relation; its dense-math core is an SpMV. CSR rows are ragged — hostile to
+fixed VMEM tiles — so rows are packed into ELL format (fixed K slots per
+row, padded with column 0 / weight 0), giving a perfectly regular
+(rows, K) gather + multiply + lane-reduce per tile.
+
+  cols : [n, K] int32   column index per slot (pad -> 0)
+  vals : [n, K] float32 weight per slot       (pad -> 0.0)
+  x    : [n]    float32 input vector (resident in VMEM, whole)
+  y    : [n]    float32 output, y[i] = sum_k vals[i,k] * x[cols[i,k]]
+
+Grid over row tiles. The x gather uses jnp.take inside the kernel — on TPU
+this lowers to a VMEM dynamic gather, the idiomatic equivalent of the
+scalar-prefetch embedding pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import cdiv
+
+
+def _kernel(cols_ref, vals_ref, x_ref, y_ref):
+    cols = cols_ref[...]                          # (rows, K)
+    vals = vals_ref[...]
+    x = x_ref[...]                                # (n,) whole vector
+    gathered = jnp.take(x, cols, axis=0)          # (rows, K)
+    y_ref[...] = (gathered * vals).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmv_ell_kernel(cols, vals, x, *, block_rows: int = 512,
+                    interpret: bool = False):
+    n, k = cols.shape
+    assert vals.shape == (n, k) and n % block_rows == 0
+    grid = (cdiv(n, block_rows),)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(cols, vals, x)

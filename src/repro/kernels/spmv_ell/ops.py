@@ -1,0 +1,47 @@
+"""Jit'd public wrapper + CSR->ELL packing for the SpMV kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import interpret_default, round_up
+from repro.kernels.spmv_ell.kernel import spmv_ell_kernel
+
+_BLOCK_ROWS = 512
+
+
+def csr_to_ell(offsets, neighbors, values=None, k: int | None = None):
+    """Pack CSR into ELL (cols [n,K] int32, vals [n,K] f32). Rows longer
+    than K must be pre-split by the caller (k defaults to max degree)."""
+    offsets = np.asarray(offsets)
+    neighbors = np.asarray(neighbors)
+    n = len(offsets) - 1
+    deg = np.diff(offsets)
+    if k is None:
+        k = int(deg.max()) if n else 1
+    assert int(deg.max() if n else 0) <= k, "row exceeds ELL width"
+    cols = np.zeros((n, k), dtype=np.int32)
+    vals = np.zeros((n, k), dtype=np.float32)
+    row = np.repeat(np.arange(n), deg)
+    slot = np.arange(len(neighbors)) - np.repeat(offsets[:-1], deg)
+    cols[row, slot] = neighbors
+    vals[row, slot] = 1.0 if values is None else np.asarray(values, np.float32)
+    return cols, vals
+
+
+def spmv_ell(cols, vals, x, *, interpret=None):
+    """y = sum_k vals[:, k] * x[cols[:, k]] with row padding handled."""
+    if interpret is None:
+        interpret = interpret_default()
+    cols = jnp.asarray(cols, jnp.int32)
+    vals = jnp.asarray(vals, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    n, k = cols.shape
+    npad = round_up(max(n, _BLOCK_ROWS), _BLOCK_ROWS)
+    kpad = round_up(max(k, 128), 128)
+    if (npad, kpad) != (n, k):
+        cols = jnp.zeros((npad, kpad), jnp.int32).at[:n, :k].set(cols)
+        vals = jnp.zeros((npad, kpad), jnp.float32).at[:n, :k].set(vals)
+    y = spmv_ell_kernel(cols, vals, x, block_rows=_BLOCK_ROWS,
+                        interpret=interpret)
+    return y[:n]

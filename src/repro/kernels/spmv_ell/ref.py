@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the ELL SpMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def spmv_ell_ref(cols, vals, x):
+    return (jnp.take(x, cols, axis=0) * vals).sum(axis=1)

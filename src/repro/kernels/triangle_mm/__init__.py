@@ -1,0 +1,1 @@
+from repro.kernels.triangle_mm.ops import triangle_count_dense  # noqa: F401

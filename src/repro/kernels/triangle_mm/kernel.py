@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: MXU masked-matmul triangle counting.
+
+Beyond-paper optimization (DESIGN.md §2): for the *dense cohort* of the
+set-layout optimizer, triangle counting over a 0/1 adjacency block is
+
+    count = sum( (A @ A) * A )
+
+which maps onto the 128x128 systolic MXU instead of the VPU — the CPU paper
+has no analogue of this formulation (AVX has no systolic unit). On pruned
+DAGs (src > dst, the paper's symmetric filtering) the sum counts each
+triangle exactly once; on symmetric adjacencies it counts 6x.
+
+Grid (i, j, k): C_ij partial accumulates over k in a VMEM scratch; on the
+last k step the partial is masked by A_ij and folded into a scalar output.
+
+  a   : [n, n] float32 0/1 adjacency (padded to 128 multiples)
+  out : [1, 1] float32 triangle count (before symmetry division)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv
+
+
+def _kernel(a_ik_ref, a_kj_ref, a_ij_ref, out_ref, acc_ref, *, n_k: int):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0) & (k == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU contraction for this (i, j) tile's k-slice.
+    acc_ref[...] += jnp.dot(a_ik_ref[...], a_kj_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _fold():
+        masked = acc_ref[...] * a_ij_ref[...]
+        out_ref[0, 0] += masked.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def triangle_mm_kernel(a, *, block: int = 256, interpret: bool = False):
+    n = a.shape[0]
+    assert a.shape == (n, n) and n % block == 0, a.shape
+    nb = cdiv(n, block)
+    kernel = functools.partial(_kernel, n_k=nb)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, k: (i, k)),  # A_ik
+            pl.BlockSpec((block, block), lambda i, j, k: (k, j)),  # A_kj
+            pl.BlockSpec((block, block), lambda i, j, k: (i, j)),  # A_ij mask
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+        interpret=interpret,
+    )(a, a, a)

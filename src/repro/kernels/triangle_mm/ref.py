@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the MXU triangle-count kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def triangle_count_dense_ref(a):
+    """sum((A @ A) * A) over a 0/1 float adjacency."""
+    return ((a @ a) * a).sum()

@@ -1,0 +1,1 @@
+from repro.kernels.uint_intersect.ops import uint_intersect_count  # noqa: F401

@@ -1,0 +1,61 @@
+"""Jit'd public wrapper for the uint-intersect kernel.
+
+Takes ragged CSR pairs, pads the gathered neighbor sets to tile geometry,
+and runs the Pallas membership-test kernel. Used by the execution engine for
+similar-cardinality sparse-set batches (the SIMDShuffling regime); the
+cardinality-skewed regime stays on the lockstep binary search.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import LANE, interpret_default, round_up
+from repro.kernels.uint_intersect.kernel import uint_intersect_kernel
+
+_BLOCK_ROWS = 8
+
+
+def uint_intersect_count(a, b, *, interpret=None):
+    """Counts for already-padded batches a [P, LA], b [P, LB] (pad = -1)."""
+    if interpret is None:
+        interpret = interpret_default()
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    p, la = a.shape
+    if p == 0:
+        return jnp.zeros((0,), jnp.int32)
+    ppad = round_up(p, _BLOCK_ROWS)
+    lbpad = round_up(max(b.shape[1], LANE), LANE)
+    lapad = round_up(max(la, LANE), LANE)
+    a2 = jnp.full((ppad, lapad), -1, jnp.int32).at[:p, :la].set(a)
+    b2 = jnp.full((ppad, lbpad), -1, jnp.int32).at[:p, :b.shape[1]].set(b)
+    out = uint_intersect_kernel(a2, b2, block_rows=_BLOCK_ROWS,
+                                lb_blk=LANE, interpret=interpret)
+    return out[:p]
+
+
+def intersect_count_csr(offsets, neighbors, u, v, *, interpret=None,
+                        max_len: int = 512):
+    """CSR front-end: gather + pad N(u_i), N(v_i) then run the kernel.
+
+    Pairs whose min-degree exceeds ``max_len`` should be routed to the
+    search path by the caller; here they are asserted against.
+    """
+    offsets = np.asarray(offsets)
+    neighbors = np.asarray(neighbors)
+    u = np.asarray(u, np.int64)
+    v = np.asarray(v, np.int64)
+    deg = np.diff(offsets)
+    la = int(max(1, deg[u].max() if len(u) else 1))
+    lb = int(max(1, deg[v].max() if len(v) else 1))
+    assert max(la, lb) <= max_len, "route long sets to the search path"
+    a = np.full((len(u), la), -1, np.int32)
+    b = np.full((len(v), lb), -1, np.int32)
+    for i, (uu, vv) in enumerate(zip(u, v)):
+        na = neighbors[offsets[uu]:offsets[uu + 1]]
+        nb = neighbors[offsets[vv]:offsets[vv + 1]]
+        a[i, :len(na)] = na
+        b[i, :len(nb)] = nb
+    return np.asarray(uint_intersect_count(a, b, interpret=interpret),
+                      np.int64)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the batched uint intersection kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def uint_intersect_count_ref(a, b):
+    """Padded-batch intersection counts.
+
+    a, b: [P, L*] int32 sorted rows padded with -1. Rows are sets (unique
+    values), so counting membership hits of a's valid entries in b equals
+    the intersection cardinality.
+    """
+    valid = a >= 0
+    hit = (a[:, :, None] == b[:, None, :]).any(axis=2)
+    return (hit & valid).sum(axis=1).astype(jnp.int32)

@@ -1,0 +1,431 @@
+"""Cell builders: one (arch x shape x mesh) -> (fn, input ShapeDtypeStructs,
+in/out shardings, analytic-FLOP metadata).
+
+This is the module the dry-run, the roofline analysis, and the launchers
+share. Inputs are ShapeDtypeStructs throughout — nothing allocates until a
+launcher feeds real arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import ArchDef, ShapeDef
+from repro.dist.act_sharding import with_batch_axes
+from repro.dist.sharding import (GNN_RULES, LM_DENSE_FSDP_RULES, LM_RULES,
+                                 RECSYS_RULES, resolve_batch_specs,
+                                 resolve_param_specs, zero1_specs)
+from repro.launch.mesh import batch_axes_of
+from repro.models import transformer as tfm
+from repro.models.gnn import dimenet as dn
+from repro.models.gnn import equivariant as eq
+from repro.models.gnn import gcn as gcn_mod
+from repro.models.recsys import fm as fm_mod
+from repro.optim import adamw, linear_warmup_cosine
+from repro.train import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+ENGINE_PAD = np.int32(2**31 - 1)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable                 # positional args match ``args``
+    args: Tuple[Any, ...]        # pytrees of ShapeDtypeStruct
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any           # pytree (None = compiler-chosen)
+    model_flops: float           # analytic "useful" FLOPs per step
+    model_params: int
+    description: str = ""
+    donate: Tuple[int, ...] = ()
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def build_cell(arch_name: str, shape_name: str, mesh: Mesh,
+               fsdp: bool = True, serve_fsdp: bool = True,
+               accum_steps: int = 1) -> Cell:
+    arch = get_arch(arch_name)
+    shape = arch.shape(shape_name)
+    if shape.skip:
+        raise ValueError(f"cell {arch_name}/{shape_name} is N/A: {shape.skip}")
+    if arch.family == "lm":
+        return _lm_cell(arch, shape, mesh, fsdp, serve_fsdp, accum_steps)
+    if arch.family == "gnn":
+        return _gnn_cell(arch, shape, mesh)
+    if arch.family == "recsys":
+        return _recsys_cell(arch, shape, mesh)
+    if arch.family == "engine":
+        return _engine_cell(arch, shape, mesh)
+    raise ValueError(arch.family)
+
+
+# ------------------------------------------------------------------ LM cells
+def _lm_state(cfg, mesh, rules, fsdp):
+    params_sds = jax.eval_shape(lambda k: tfm.init(k, cfg),
+                                jax.random.PRNGKey(0))
+    axes = tfm.param_axes(cfg)
+    pspecs = resolve_param_specs(axes, params_sds, mesh, rules, fsdp=fsdp)
+    return params_sds, pspecs
+
+
+def _batch_spec(b: int, mesh, axes: Tuple[str, ...]) -> P:
+    """Longest divisible prefix of the composed batch axes."""
+    axes = tuple(a for a in axes if a in mesh.shape)
+    while axes:
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        if b % total == 0:
+            return P(axes)
+        axes = axes[:-1]
+    return P(None)
+
+
+def _lm_cell(arch: ArchDef, shape: ShapeDef, mesh, fsdp, serve_fsdp,
+             accum_steps) -> Cell:
+    cfg = arch.config
+    b = shape.params["global_batch"]
+    s = shape.params["seq_len"]
+    baxes = batch_axes_of(mesh)
+    tokens_spec = _batch_spec(b, mesh, baxes)
+
+    if shape.kind == "train":
+        # dense archs train with the 2D-FSDP mapping (no TP — see
+        # LM_DENSE_FSDP_RULES); MoE archs keep EP over 'model'
+        rules = LM_RULES if cfg.is_moe else LM_DENSE_FSDP_RULES
+        act_batch = ("pod", "data") if cfg.is_moe \
+            else ("pod", "data", "model")
+        tokens_spec = _batch_spec(b, mesh, ("pod",) + rules.batch_axes)
+        params_sds, pspecs = _lm_state(cfg, mesh, rules, fsdp)
+        opt = adamw(linear_warmup_cosine(3e-4, 100, 10_000),
+                    mu_dtype=jnp.bfloat16, weight_decay=0.1)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        ospecs = {k: zero1_specs(pspecs, params_sds, mesh, rules)
+                  for k in ("mu", "nu")}
+        state_sds = {"params": params_sds, "opt_state": opt_sds,
+                     "step": SDS((), jnp.int32)}
+        state_specs = {"params": pspecs, "opt_state": ospecs, "step": P()}
+        batch_sds = {"tokens": SDS((b, s), jnp.int32),
+                     "targets": SDS((b, s), jnp.int32)}
+        batch_specs = {"tokens": tokens_spec, "targets": tokens_spec}
+        step = with_batch_axes(make_train_step(
+            lambda p, bt: tfm.loss_fn(p, bt, cfg), opt,
+            accum_steps=accum_steps), act_batch)
+        flops = 6.0 * cfg.active_param_count() * b * s \
+            + 12.0 * cfg.n_layers * b * s * s * cfg.n_heads * cfg.d_head \
+            * (0.5 if cfg.attention != "swa" else min(1.0, cfg.window / s))
+        return Cell(arch.name, shape.name, "train", step,
+                    (state_sds, batch_sds),
+                    (_named(mesh, state_specs), _named(mesh, batch_specs)),
+                    (_named(mesh, state_specs), None),
+                    flops, cfg.param_count(),
+                    f"{arch.name} train {b}x{s}")
+
+    params_sds, pspecs = _lm_state(cfg, mesh, LM_RULES, serve_fsdp)
+    cache_sds = jax.eval_shape(lambda: tfm.init_cache(cfg, b, s))
+    cache_specs = resolve_batch_specs(
+        tfm.cache_axes(cfg), cache_sds, mesh, LM_RULES)
+
+    if shape.kind == "prefill":
+        def fn(params, tokens):
+            return tfm.prefill(params, tokens, cfg, max_len=s)
+        flops = 2.0 * cfg.active_param_count() * b * s \
+            + 4.0 * cfg.n_layers * b * s * s * cfg.n_heads * cfg.d_head \
+            * (0.5 if cfg.attention != "swa" else min(1.0, cfg.window / s))
+        logits_spec = P(baxes if b % np.prod(
+            [mesh.shape[a] for a in baxes]) == 0 else None, "model") \
+            if cfg.vocab % mesh.shape["model"] == 0 else P(None)
+        return Cell(arch.name, shape.name, "prefill", fn,
+                    (params_sds, SDS((b, s), jnp.int32)),
+                    (_named(mesh, pspecs), NamedSharding(mesh, tokens_spec)),
+                    (NamedSharding(mesh, logits_spec),
+                     _named(mesh, cache_specs)),
+                    flops, cfg.param_count(),
+                    f"{arch.name} prefill {b}x{s}")
+
+    assert shape.kind == "decode"
+    step = tfm.decode_step_mla if cfg.attention == "mla" else tfm.decode_step
+
+    def fn(params, cache, tokens):
+        return step(params, cache, tokens, cfg)
+
+    cache_tokens = min(s, cfg.window) if cfg.attention == "swa" else s
+    if cfg.attention == "mla":
+        cache_bytes_per_tok = cfg.kv_lora_rank + cfg.qk_rope_dim
+    else:
+        cache_bytes_per_tok = 2 * cfg.n_kv_heads * cfg.d_head
+    flops = 2.0 * cfg.active_param_count() * b \
+        + 2.0 * cfg.n_layers * b * cache_tokens * cache_bytes_per_tok
+    return Cell(arch.name, shape.name, "decode", fn,
+                (params_sds, cache_sds, SDS((b, 1), jnp.int32)),
+                (_named(mesh, pspecs), _named(mesh, cache_specs),
+                 NamedSharding(mesh, tokens_spec)),
+                (None, _named(mesh, cache_specs)),
+                flops, cfg.param_count(),
+                f"{arch.name} decode b={b} cache={cache_tokens}",
+                donate=(1,))
+
+
+# ----------------------------------------------------------------- GNN cells
+def _gnn_batch_sds(arch: ArchDef, shape: ShapeDef, mesh):
+    """Build the batch ShapeDtypeStructs + specs for one GNN shape."""
+    p = shape.params
+    all_axes = tuple(mesh.shape.keys())
+    n_shards = int(np.prod(list(mesh.shape.values())))
+
+    if shape.name == "minibatch_lg":
+        # sampled subgraph: seeds + fanout hops (see data.sampler)
+        fanout = p["fanout"]
+        sizes = [p["batch_nodes"]]
+        for f in fanout:
+            sizes.append(sizes[-1] * f)
+        n = sum(sizes)
+        e = sum(sizes[i] * fanout[i] for i in range(len(fanout)))
+    elif shape.name == "molecule":
+        n = p["batch"] * p["n_nodes"]
+        e = p["batch"] * p["n_edges"]
+    else:
+        n = p["n_nodes"]
+        e = p["n_edges"]
+    epad = _round_up(e, n_shards)
+
+    espec = P(all_axes)
+    batch = {
+        "senders": SDS((epad,), jnp.int32),
+        "receivers": SDS((epad,), jnp.int32),
+        "edge_mask": SDS((epad,), jnp.float32),
+    }
+    specs = {"senders": espec, "receivers": espec, "edge_mask": espec}
+
+    name = arch.name
+    if name == "gcn-cora":
+        d_feat = p.get("d_feat", 16)
+        n_classes = p.get("n_classes", 8)
+        batch.update({"features": SDS((n, d_feat), jnp.float32),
+                      "labels": SDS((n,), jnp.int32),
+                      "mask": SDS((n,), jnp.float32)})
+        specs.update({"features": P(None), "labels": P(None),
+                      "mask": P(None)})
+    else:
+        batch.update({"species": SDS((n,), jnp.int32),
+                      "positions": SDS((n, 3), jnp.float32)})
+        specs.update({"species": P(None), "positions": P(None)})
+        n_graphs = p.get("batch", 1)
+        batch.update({"graph_id": SDS((n,), jnp.int32),
+                      "energy": SDS((n_graphs,), jnp.float32)})
+        specs.update({"graph_id": P(None), "energy": P(None)})
+        if name == "dimenet":
+            from repro.configs.dimenet import TRIPLET_FACTOR
+            t = _round_up(e * TRIPLET_FACTOR[shape.name], n_shards)
+            batch.update({"t_e1": SDS((t,), jnp.int32),
+                          "t_e2": SDS((t,), jnp.int32),
+                          "t_mask": SDS((t,), jnp.float32)})
+            specs.update({"t_e1": espec, "t_e2": espec, "t_mask": espec})
+    return batch, specs, n, epad
+
+
+def _gnn_model(arch: ArchDef, shape: ShapeDef):
+    """(init, loss_fn, param_axes, cfg) for the arch, with per-shape
+    d_feat/n_classes overrides for GCN (each shape is its own dataset)."""
+    if arch.name == "gcn-cora":
+        # per-shape dataset dims (molecule has none -> small defaults,
+        # matching _gnn_batch_sds)
+        cfg = dataclasses.replace(
+            arch.config,
+            d_feat=shape.params.get("d_feat", 16),
+            n_classes=shape.params.get("n_classes", 8))
+        return gcn_mod.init, gcn_mod.loss_fn, gcn_mod.param_axes, cfg
+    if arch.name == "dimenet":
+        return dn.init, dn.loss_fn, dn.param_axes, arch.config
+    if arch.name == "nequip":
+        return eq.init, eq.loss_fn, eq.param_axes, arch.config
+    if arch.name == "mace":
+        return eq.mace_init, eq.mace_loss_fn, eq.mace_param_axes, arch.config
+    raise ValueError(arch.name)
+
+
+def _gnn_flops(arch: ArchDef, shape: ShapeDef, n: int, e: int) -> float:
+    cfg = arch.config
+    if arch.name == "gcn-cora":
+        d_feat = shape.params.get("d_feat", 16)
+        dims = [d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) \
+            + [shape.params.get("n_classes", 8)]
+        fwd = sum(2.0 * n * dims[i] * dims[i + 1] + 2.0 * e * dims[i + 1]
+                  for i in range(cfg.n_layers))
+        return 3.0 * fwd
+    if arch.name == "dimenet":
+        from repro.configs.dimenet import TRIPLET_FACTOR
+        t = e * TRIPLET_FACTOR[shape.name]
+        d, nb = cfg.d_hidden, cfg.n_bilinear
+        per_block = (2.0 * e * d * d * 4
+                     + 2.0 * t * (cfg.n_spherical * cfg.n_radial * nb
+                                  + nb * d * d / 64))   # bilinear: see model
+        # the bilinear einsum is t * nb * d * d
+        per_block = 2.0 * e * d * d * 4 + 2.0 * t * nb * d * d
+        return 3.0 * cfg.n_blocks * per_block
+    # nequip / mace: per-path depthwise TP + channel mixes
+    c = cfg.d_hidden
+    n_paths = len(cfg.paths)
+    tp = sum(2.0 * e * c * (2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1)
+             for (l1, l2, l3) in cfg.paths)
+    mix = 2.0 * n * c * c * (cfg.l_max + 1) ** 2
+    radial = 2.0 * e * (cfg.n_rbf * cfg.radial_hidden
+                        + cfg.radial_hidden * n_paths * c)
+    per_layer = tp + 4.0 * mix + radial
+    if arch.name == "mace":
+        per_layer += 3.0 * sum(
+            2.0 * n * c * (2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1)
+            for (l1, l2, l3) in cfg.paths)
+    return 3.0 * cfg.n_layers * per_layer
+
+
+def _gnn_cell(arch: ArchDef, shape: ShapeDef, mesh) -> Cell:
+    init, loss_fn, param_axes, cfg = _gnn_model(arch, shape)
+    batch_sds, batch_specs, n, epad = _gnn_batch_sds(arch, shape, mesh)
+    params_sds = jax.eval_shape(lambda k: init(k, cfg),
+                                jax.random.PRNGKey(0))
+    pspecs = resolve_param_specs(param_axes(cfg), params_sds, mesh,
+                                 GNN_RULES, fsdp=False)
+    opt = adamw(1e-3)
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    ospecs = {k: pspecs for k in ("mu", "nu")}
+    state_sds = {"params": params_sds, "opt_state": opt_sds,
+                 "step": SDS((), jnp.int32)}
+    state_specs = {"params": pspecs, "opt_state": ospecs, "step": P()}
+    step = make_train_step(lambda p, bt: loss_fn(p, bt, cfg), opt)
+    return Cell(arch.name, shape.name, "train", step,
+                (state_sds, batch_sds),
+                (_named(mesh, state_specs), _named(mesh, batch_specs)),
+                (_named(mesh, state_specs), None),
+                _gnn_flops(arch, shape, n, epad), cfg.param_count(),
+                f"{arch.name} {shape.name} N={n} E={epad}")
+
+
+# -------------------------------------------------------------- recsys cells
+def _recsys_cell(arch: ArchDef, shape: ShapeDef, mesh) -> Cell:
+    cfg = arch.config
+    baxes = batch_axes_of(mesh)
+    n_batch_shards = int(np.prod([mesh.shape[a] for a in baxes]))
+    params_sds = jax.eval_shape(lambda k: fm_mod.init(k, cfg),
+                                jax.random.PRNGKey(0))
+    pspecs = resolve_param_specs(fm_mod.param_axes(cfg), params_sds, mesh,
+                                 RECSYS_RULES, fsdp=False)
+    b = shape.params["batch"]
+    ids_spec = P(baxes if b % n_batch_shards == 0 else None, None)
+    lbl_spec = P(baxes if b % n_batch_shards == 0 else None)
+
+    if shape.kind == "train":
+        opt = adamw(1e-3)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        ospecs = {k: pspecs for k in ("mu", "nu")}
+        state_sds = {"params": params_sds, "opt_state": opt_sds,
+                     "step": SDS((), jnp.int32)}
+        state_specs = {"params": pspecs, "opt_state": ospecs, "step": P()}
+        batch_sds = {"ids": SDS((b, cfg.n_sparse), jnp.int32),
+                     "label": SDS((b,), jnp.float32)}
+        batch_specs = {"ids": ids_spec, "label": lbl_spec}
+        step = make_train_step(lambda p, bt: fm_mod.loss_fn(p, bt, cfg), opt)
+        flops = 3.0 * (2.0 * b * cfg.n_sparse * cfg.embed_dim * 2)
+        return Cell(arch.name, shape.name, "train", step,
+                    (state_sds, batch_sds),
+                    (_named(mesh, state_specs), _named(mesh, batch_specs)),
+                    (_named(mesh, state_specs), None),
+                    flops, cfg.param_count(),
+                    f"fm train b={b}")
+
+    if shape.kind == "score":
+        def fn(params, ids):
+            return fm_mod.forward(params, {"ids": ids}, cfg)
+        flops = 2.0 * b * cfg.n_sparse * cfg.embed_dim * 2
+        return Cell(arch.name, shape.name, "score", fn,
+                    (params_sds, SDS((b, cfg.n_sparse), jnp.int32)),
+                    (_named(mesh, pspecs), NamedSharding(mesh, ids_spec)),
+                    None, flops, cfg.param_count(), f"fm score b={b}")
+
+    assert shape.kind == "retrieval"
+    nc = shape.params["n_candidates"]
+    cand_spec = P(baxes) if nc % n_batch_shards == 0 else P(None)
+
+    def fn(params, user_ids, cand_ids):
+        return fm_mod.retrieval_scores(params, user_ids, cand_ids, cfg)
+
+    flops = 2.0 * nc * cfg.embed_dim
+    return Cell(arch.name, shape.name, "retrieval", fn,
+                (params_sds, SDS((16,), jnp.int32), SDS((nc,), jnp.int32)),
+                (_named(mesh, pspecs), NamedSharding(mesh, P(None)),
+                 NamedSharding(mesh, cand_spec)),
+                None, flops, cfg.param_count(),
+                f"fm retrieval 1x{nc}")
+
+
+# -------------------------------------------------------------- engine cells
+def engine_triangle_count_search(adj, edges):
+    """Edge-parallel WCOJ triangle count, lockstep binary search variant
+    (min property — the SIMDGalloping side of Algorithm 2). BASELINE in
+    §Perf: the log2(K) search loop re-reads the gathered rows every
+    iteration (7x HBM traffic on the padded-ELL layout)."""
+    u, v = edges[:, 0], edges[:, 1]
+    nu = adj[u]                          # [E, K]
+    nv = adj[v]                          # [E, K]
+    k = adj.shape[1]
+    pos = jax.vmap(jnp.searchsorted)(nv, nu)
+    pos = jnp.clip(pos, 0, k - 1)
+    found = (jnp.take_along_axis(nv, pos, axis=1) == nu) & (nu != ENGINE_PAD)
+    return found.sum(dtype=jnp.int64)
+
+
+def engine_triangle_count(adj, edges, kv_blk: int = 16):
+    """Edge-parallel WCOJ triangle count, blocked membership-test variant
+    (the SIMDShuffling side of Algorithm 2, which fits the similar-
+    cardinality padded-ELL rows; TPU-adapted as tile-vs-tile compares —
+    the formulation of kernels/uint_intersect). One HBM pass over the
+    gathered rows; the K x kv_blk compare cube stays in registers/VMEM.
+    10.5x lower memory roofline term than the search variant
+    (EXPERIMENTS.md §Perf). Edges shard over the whole mesh; the scalar
+    partial sums all-reduce at the end (the paper's 48-thread
+    parallelism at 512-chip scale)."""
+    nu = adj[edges[:, 0]]                # [E, K]
+    nv = adj[edges[:, 1]]
+    k = adj.shape[1]
+
+    def blk(carry, j):
+        sl = jax.lax.dynamic_slice_in_dim(nv, j * kv_blk, kv_blk, 1)
+        hit = (nu[:, :, None] == sl[:, None, :]).any(axis=2)
+        return carry | hit, None
+
+    hit0 = jnp.zeros(nu.shape, bool)
+    hit, _ = jax.lax.scan(blk, hit0, jnp.arange(k // kv_blk))
+    return (hit & (nu != ENGINE_PAD)).sum(dtype=jnp.int64)
+
+
+def _engine_cell(arch: ArchDef, shape: ShapeDef, mesh) -> Cell:
+    p = shape.params
+    n, e, k = p["n_nodes"], p["n_edges"], p["ell_width"]
+    all_axes = tuple(mesh.shape.keys())
+    n_shards = int(np.prod(list(mesh.shape.values())))
+    epad = _round_up(e, n_shards)
+    args = (SDS((n, k), jnp.int32), SDS((epad, 2), jnp.int32))
+    shardings = (NamedSharding(mesh, P(None, None)),
+                 NamedSharding(mesh, P(all_axes, None)))
+    # per edge: K searches x log2(K) steps, 2 flops each + K compares
+    flops = epad * (k * np.log2(k) * 2 + k)
+    return Cell(arch.name, shape.name, "engine", engine_triangle_count,
+                args, shardings, None, float(flops), 0,
+                f"emptyheaded triangle count E={epad} K={k}")

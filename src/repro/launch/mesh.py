@@ -1,0 +1,37 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run driver must be able to
+set XLA_FLAGS before any jax initialization.
+
+  single pod : (data=16, model=16)            = 256 chips (v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+The 'pod' axis extends data parallelism across the ICI/DCN boundary
+(gradient all-reduce hierarchy); 'model' carries TP/EP/SP intra-pod.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for smoke tests on the container CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes_of(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def total_batch_shards(mesh) -> int:
+    out = 1
+    for a in batch_axes_of(mesh):
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from the sweep JSONs.
+
+``PYTHONPATH=src python -m repro.launch.report experiments/dryrun``
+prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(d: str):
+    recs = []
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs) -> str:
+    out = ["| arch | shape | mesh | kind | state GiB/chip | HLO flops/chip "
+           "| bytes/chip | coll bytes/chip | collective mix |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                       f"— | — | — | — | SKIP: {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                       f"— | — | — | — | FAIL |")
+            continue
+        ro = r["roofline"]
+        mix = ro["coll_breakdown"]
+        mix_s = " ".join(f"{k.split('-')[-1][:3]}:{v/2**30:.0f}G"
+                         for k, v in mix.items()
+                         if k != "count" and v > (1 << 28))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | "
+            f"{fmt_bytes(r['memory']['state_bytes_per_chip'])} | "
+            f"{ro['flops']:.2e} | {ro['bytes']:.2e} | "
+            f"{ro['coll_bytes']:.2e} | {mix_s or '-'} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs) -> str:
+    out = ["| arch | shape | t_compute | t_memory | t_collective | "
+           "bottleneck | MODEL/HLO flops | MFU@roofline |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "single":
+            continue
+        ro = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {ro['t_compute_s']*1e3:.1f} ms"
+            f" | {ro['t_memory_s']*1e3:.1f} ms |"
+            f" {ro['t_collective_s']*1e3:.1f} ms | **{ro['bottleneck']}** |"
+            f" {ro['useful_flop_frac']:.2f} |"
+            f" {ro['mfu_at_roofline']*100:.2f}% |")
+    return "\n".join(out)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    ok = [r for r in recs if r["status"] == "ok"]
+    sk = [r for r in recs if r["status"] == "skip"]
+    print(f"## Dry-run ({len(ok)} compiled, {len(sk)} skipped-with-reason)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16 = 256 chips)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs            / (chips * 197e12  bf16 FLOP/s)
+  memory     = HLO_bytes            / (chips * 819e9   B/s HBM)
+  collective = collective_bytes     / (chips * 50e9    B/s per ICI link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+are parsed from the optimized HLO text (cost_analysis does not report
+them): the summed output-operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO result shape:  bf16[8,128]{1,0}  /  f32[]  /  (tuple, ...)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind over the optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result-defining lines look like: %name = TYPE[shape] op-name(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rhs:
+            continue  # -done pairs with -start; count once
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(
+            rhs.split("(")[0]))
+        out[kind] += total
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All inputs are PER-CHIP (optimized HLO is the per-device SPMD
+    program); ``model_flops`` is the GLOBAL analytic step cost."""
+
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    chips: int
+    model_flops: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global vs per-chip x chips): > 1 means
+        the compiled program does LESS than the analytic count (e.g.
+        causal-block skipping); < 1 flags remat/redundant compute."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step-time estimate = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline estimate."""
+        t = self.step_time
+        return (self.model_flops / (self.chips * PEAK_FLOPS)) / t if t else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flop_frac": self.useful_flop_frac,
+            "roofline_step_s": self.step_time, "mfu_at_roofline": self.mfu,
+        }
+
+
+def derive(compiled, chips: int, model_flops: float,
+           hlo_text: Optional[str] = None) -> Roofline:
+    """Preferred path: the structural HLO analyzer (correct while-loop
+    trip-count multipliers). ``compiled.cost_analysis()`` is kept as a
+    cross-check in the dry-run JSON (it undercounts scan bodies)."""
+    from repro.launch import hlo_analysis
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    st = hlo_analysis.analyze(text)
+    coll = {k: int(v) for k, v in st.coll.items()}
+    coll["count"] = st.coll_count
+    return Roofline(st.flops, st.bytes_accessed, st.coll_bytes, coll,
+                    chips, model_flops)

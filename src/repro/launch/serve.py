@@ -1,0 +1,43 @@
+"""Serving launcher: batched greedy decoding on a reduced config.
+
+``python -m repro.launch.serve --arch minicpm3-4b --requests 8``
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.train import reduced_lm_config
+from repro.models import transformer as tfm
+from repro.serve import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    assert arch.family == "lm"
+    cfg = reduced_lm_config(arch.config)
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, batch_slots=args.batch_slots,
+                      max_len=args.prompt_len + args.new_tokens + 1)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab, args.prompt_len)
+                    .astype(np.int32), max_new_tokens=args.new_tokens)
+            for _ in range(args.requests)]
+    outs = eng.run(reqs)
+    for i, o in enumerate(outs):
+        print(f"req{i}: {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On the container this runs REDUCED configs on the host CPU (1-device mesh);
+on a real cluster the same entrypoint builds the production mesh and the
+cell shardings from ``repro.launch.cells`` — the model/step code is
+identical (logical-axis sharding; DESIGN.md §4).
+
+Compute/comm overlap notes (real-TPU deployment):
+  * scan-over-layers + the XLA latency-hiding scheduler overlap each
+    layer's gradient all-reduce/reduce-scatter with the next layer's
+    matmuls; enable with
+    ``--xla_tpu_enable_async_collective_fusion=true``
+    ``--xla_tpu_overlap_compute_collective_tc=true`` (flags documented
+    here so the launcher is the single source of deployment truth).
+  * grad accumulation (--accum) additionally pipelines DCN all-reduces
+    across microbatches for multi-pod meshes.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.lm import TokenPipeline
+from repro.dist.fault import FaultPolicy
+from repro.models import transformer as tfm
+from repro.optim import adamw, linear_warmup_cosine
+from repro.train import TrainState, make_train_step, train_loop
+
+logging.basicConfig(level=logging.INFO,
+                    format="%(asctime)s %(name)s %(message)s")
+
+
+def reduced_lm_config(cfg: tfm.TransformerConfig) -> tfm.TransformerConfig:
+    """Shrink an assigned LM config to smoke scale, keeping its structure
+    (attention kind, MoE-ness, biases)."""
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=min(4, cfg.n_kv_heads), d_head=16,
+        d_ff=128, vocab=256,
+        n_experts=min(4, cfg.n_experts) if cfg.is_moe else 0,
+        q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+        v_head_dim=16, window=min(64, cfg.window),
+        dtype=jnp.float32, q_block=64, kv_block=64)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full-scale", action="store_true",
+                    help="use the assigned config as-is (cluster only)")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    assert arch.family == "lm", "this launcher trains LM archs; see examples/"
+    cfg = arch.config if args.full_scale else reduced_lm_config(arch.config)
+
+    key = jax.random.PRNGKey(0)
+    params = tfm.init(key, cfg)
+    opt = adamw(linear_warmup_cosine(args.lr, 10, args.steps),
+                weight_decay=0.1)
+    state = TrainState.create(params, opt).tree()
+    step = jax.jit(make_train_step(
+        lambda p, b: tfm.loss_fn(p, b, cfg), opt, accum_steps=args.accum))
+
+    pipe = TokenPipeline(cfg.vocab, args.batch, args.seq)
+
+    def batch_at(i):
+        b = pipe.batch_at(i)
+        if args.accum > 1:
+            b = jax.tree.map(
+                lambda x: x.reshape(args.accum, -1, *x.shape[1:]), b)
+        return jax.tree.map(jnp.asarray, b)
+
+    policy = FaultPolicy(checkpoint_every=args.ckpt_every)
+    state, metrics = train_loop(step, state, batch_at, args.steps,
+                                ckpt_dir=args.ckpt_dir, policy=policy)
+    print(f"final loss: {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

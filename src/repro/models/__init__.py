@@ -1,0 +1,11 @@
+"""Model zoo: LM transformers (dense / GQA / MLA / SWA / MoE), GNNs
+(GCN, DimeNet, NequIP, MACE), and recsys (FM).
+
+Every model follows the same functional contract:
+
+  init(key, cfg)          -> params pytree (works under jax.eval_shape)
+  apply / loss_fn         -> pure functions of (params, batch)
+  param_axes(cfg)         -> pytree of logical-axis tuples (for pjit)
+
+Logical axes are resolved to mesh axes by ``repro.dist.sharding``.
+"""

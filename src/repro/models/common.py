@@ -1,0 +1,46 @@
+"""Shared model-building blocks: initializers, norms, logical-axis pytrees."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Fan-in scaled normal init (works under eval_shape).
+
+    The scale is a weak-typed Python float so the requested dtype is
+    preserved (a numpy scalar would promote bf16 -> f32)."""
+    fan_in = shape[in_axis] if shape else 1
+    return jax.random.normal(key, shape, dtype) / float(np.sqrt(max(1, fan_in)))
+
+
+def embed_init(key, shape, scale: float = 1.0, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jax.nn.silu(x @ w_gate)
+    u = x @ w_up
+    return (g * u) @ w_down
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))
+
+
+def tree_axes(template: Dict[str, Any]) -> Dict[str, Any]:
+    """Identity helper to make axis pytrees read clearly at call sites."""
+    return template
+
+
+def split_keys(key, n: int):
+    return jax.random.split(key, n)

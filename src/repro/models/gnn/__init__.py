@@ -1,0 +1,12 @@
+"""GNN model zoo.
+
+All message passing is built on ``jax.ops.segment_sum`` over edge-index
+scatter — JAX has no native sparse message passing (BCOO only), so this
+substrate IS part of the system (see kernel_taxonomy §GNN). The relational
+view: a GNN layer is a semiring join-aggregate over the Edge relation,
+which is the paper's "graph processing = relational algebra" thesis
+(DESIGN.md §5).
+"""
+from repro.models.gnn.gcn import GCNConfig  # noqa: F401
+from repro.models.gnn.dimenet import DimeNetConfig  # noqa: F401
+from repro.models.gnn.equivariant import MACEConfig, NequIPConfig  # noqa: F401

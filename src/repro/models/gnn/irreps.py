@@ -1,0 +1,145 @@
+"""Minimal real-spherical-harmonic irrep algebra for NequIP/MACE.
+
+No e3nn dependency: real SH (orthonormal, l <= 2 explicit formulas), exact
+real-basis Clebsch-Gordan tensors (sympy CG + complex->real unitary,
+computed once and cached), and numerically-recovered Wigner-D matrices for
+the equivariance property tests.
+
+Feature convention: an irrep feature of degree l is an array
+[..., channels, 2l+1]; a full feature is a dict {l: array}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import numpy as np
+
+_SQRT_PI = np.sqrt(np.pi)
+
+
+# ------------------------------------------------------- spherical harmonics
+def sph_harm_real(l: int, vec):
+    """Real orthonormal SH evaluated at unit vectors vec [..., 3].
+
+    Returns [..., 2l+1] ordered m = -l..l. Supports l in {0, 1, 2}.
+    Works on numpy or jax arrays.
+    """
+    xp = np
+    try:  # allow jax arrays transparently
+        import jax.numpy as jnp
+        if not isinstance(vec, np.ndarray):
+            xp = jnp
+    except ImportError:
+        pass
+    x, y, z = vec[..., 0], vec[..., 1], vec[..., 2]
+    if l == 0:
+        return xp.full(vec.shape[:-1] + (1,), 0.5 / _SQRT_PI, vec.dtype) \
+            if xp is np else xp.full(vec.shape[:-1] + (1,), 0.5 / _SQRT_PI,
+                                     dtype=vec.dtype)
+    if l == 1:
+        c = np.sqrt(3 / (4 * np.pi))
+        return xp.stack([c * y, c * z, c * x], axis=-1)
+    if l == 2:
+        c1 = 0.5 * np.sqrt(15 / np.pi)
+        c2 = 0.25 * np.sqrt(5 / np.pi)
+        c3 = 0.25 * np.sqrt(15 / np.pi)
+        return xp.stack([
+            c1 * x * y,
+            c1 * y * z,
+            c2 * (3 * z * z - 1.0),
+            c1 * x * z,
+            c3 * (x * x - y * y) * 2.0 * 0.5,
+        ], axis=-1)
+    raise NotImplementedError(f"l={l}")
+
+
+# --------------------------------------------------------- real CG tensors
+def _u_real(l: int) -> np.ndarray:
+    """Unitary mapping complex SH -> real SH: Y_real = U @ Y_complex.
+
+    Rows indexed by real m = -l..l, cols by complex m' = -l..l.
+    """
+    dim = 2 * l + 1
+    u = np.zeros((dim, dim), dtype=np.complex128)
+    for m in range(-l, l + 1):
+        i = m + l
+        if m == 0:
+            u[i, l] = 1.0
+        elif m > 0:
+            u[i, m + l] = (-1) ** m / np.sqrt(2)
+            u[i, -m + l] = 1 / np.sqrt(2)
+        else:  # m < 0
+            am = -m
+            u[i, am + l] = -1j * (-1) ** am / np.sqrt(2)
+            u[i, -am + l] = 1j / np.sqrt(2)
+    return u
+
+
+@functools.lru_cache(maxsize=None)
+def clebsch_gordan(l1: int, l2: int, l3: int) -> np.ndarray:
+    """Real-basis CG tensor C [2l1+1, 2l2+1, 2l3+1]:
+    (x ⊗ y)^{l3}_{m3} = sum_{m1 m2} C[m1, m2, m3] x_{m1} y_{m2}
+    is equivariant when x, y transform as real-SH irreps l1, l2.
+    """
+    from sympy.physics.quantum.cg import CG
+    from sympy import S
+
+    d1, d2, d3 = 2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1
+    cc = np.zeros((d1, d2, d3), dtype=np.complex128)
+    for m1 in range(-l1, l1 + 1):
+        for m2 in range(-l2, l2 + 1):
+            m3 = m1 + m2
+            if abs(m3) <= l3:
+                cc[m1 + l1, m2 + l2, m3 + l3] = float(
+                    CG(S(l1), S(m1), S(l2), S(m2), S(l3), S(m3)).doit())
+    u1, u2, u3 = _u_real(l1), _u_real(l2), _u_real(l3)
+    creal = np.einsum("ia,jb,abc,kc->ijk", u1, u2, cc, u3.conj())
+    re, im = np.real(creal), np.imag(creal)
+    if np.abs(re).max() >= np.abs(im).max():
+        out = re
+        assert np.abs(im).max() < 1e-10, (l1, l2, l3, np.abs(im).max())
+    else:
+        out = im
+        assert np.abs(re).max() < 1e-10, (l1, l2, l3, np.abs(re).max())
+    return np.ascontiguousarray(out)
+
+
+def tp_paths(l_max: int):
+    """All (l1, l2, l3) with l1,l2,l3 <= l_max and |l1-l2| <= l3 <= l1+l2."""
+    paths = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(abs(l1 - l2), min(l1 + l2, l_max) + 1):
+                paths.append((l1, l2, l3))
+    return paths
+
+
+# ----------------------------------------------------------- test utilities
+def wigner_d_real(l: int, rot: np.ndarray) -> np.ndarray:
+    """Representation matrix D_l(R) for real SH, recovered numerically:
+    Y_l(R r) = D_l(R) Y_l(r). Exact to lstsq precision — used by tests."""
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(max(64, 8 * (2 * l + 1)), 3))
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    a = sph_harm_real(l, pts)                         # [P, 2l+1]
+    b = sph_harm_real(l, pts @ rot.T)                 # [P, 2l+1]
+    d, *_ = np.linalg.lstsq(a, b, rcond=None)
+    return d.T                                        # Y(Rr) = D @ Y(r)
+
+
+def random_rotation(seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.normal(size=(3, 3)))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+def rotate_feature(feat: Dict[int, np.ndarray], rot: np.ndarray):
+    """Apply D_l(R) to every irrep component of a feature dict."""
+    out = {}
+    for l, x in feat.items():
+        d = wigner_d_real(l, rot)
+        out[l] = np.einsum("...ci,ji->...cj", np.asarray(x), d.T)
+    return out

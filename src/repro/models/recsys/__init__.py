@@ -1,0 +1,1 @@
+from repro.models.recsys.fm import FMConfig  # noqa: F401

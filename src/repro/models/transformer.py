@@ -1,0 +1,746 @@
+"""LM transformer family: dense / GQA / SWA / MLA attention + optional MoE.
+
+One parameterized architecture covers the five assigned LM configs:
+
+  arctic-480b   MoE 128e top-2 + dense residual FFN, GQA kv=8
+  mixtral-8x7b  MoE 8e top-2, GQA kv=8, sliding-window attention (4096)
+  granite-3-8b  dense, GQA kv=8
+  qwen2-72b     dense, GQA kv=8, QKV bias
+  minicpm3-4b   dense, MLA (latent-compressed KV)
+
+Functional style: ``init`` builds a params pytree with per-layer weights
+stacked on a leading [L] axis so the forward pass is one ``lax.scan`` over
+layers (HLO size O(1) in depth; 80-layer qwen2 compiles as one scanned
+block). Attention is flash-style: nested scans over query/key blocks with
+an online-softmax accumulator, so peak memory is O(q_blk * kv_blk), never
+O(S^2) — required for the 32k prefill shapes.
+
+Logical weight axes (resolved to mesh axes by ``repro.dist.sharding``):
+  "vocab" "embed" "heads" "kv_heads" "head_dim" "mlp" "expert" "qk_lora".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.act_sharding import constrain, model_axis_size
+from repro.models.common import dense_init, embed_init, rms_norm
+
+
+# --------------------------------------------------------------------- config
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    # attention
+    attention: str = "full"          # full | swa | mla
+    window: int = 4096               # swa window
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    # MLA dims (minicpm3-style)
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+    # MoE
+    n_experts: int = 0               # 0 => dense FFN
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    dense_residual: bool = False     # arctic: dense FFN in parallel with MoE
+    # numerics / exec
+    dtype: Any = jnp.bfloat16
+    remat: str = "dots"              # none | dots | full
+    q_block: int = 512
+    kv_block: int = 1024
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (for 6ND roofline math)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        if self.attention == "mla":
+            qk = self.qk_nope_dim + self.qk_rope_dim
+            attn = (d * self.q_lora_rank
+                    + self.q_lora_rank * self.n_heads * qk
+                    + d * (self.kv_lora_rank + self.qk_rope_dim)
+                    + self.kv_lora_rank * self.n_heads
+                    * (self.qk_nope_dim + self.v_head_dim)
+                    + self.n_heads * self.v_head_dim * d)
+        else:
+            attn = (d * self.n_heads * self.d_head
+                    + 2 * d * self.n_kv_heads * self.d_head
+                    + self.n_heads * self.d_head * d)
+        ffn = 3 * d * f
+        per_layer = attn + (self.n_experts or 1) * ffn
+        if self.dense_residual:
+            per_layer += ffn
+        if self.is_moe:
+            per_layer += d * self.n_experts  # router
+        return self.n_layers * per_layer + 2 * v * d  # embed + unembed
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        ffn = 3 * d * f
+        inactive = self.n_layers * (self.n_experts - self.top_k) * ffn
+        return self.param_count() - inactive
+
+
+# --------------------------------------------------------------------- params
+def init(key, cfg: TransformerConfig):
+    """Params pytree; per-layer tensors stacked on leading [L]."""
+    keys = jax.random.split(key, 16)
+    L, d, dt = cfg.n_layers, cfg.d_model, cfg.dtype
+    p: Dict[str, Any] = {
+        "embed": embed_init(keys[0], (cfg.vocab, d), 0.02, dt),
+        "unembed": dense_init(keys[1], (d, cfg.vocab), 0, dt),
+        "final_norm": jnp.ones((d,), dt),
+    }
+    blk: Dict[str, Any] = {
+        "attn_norm": jnp.ones((L, d), dt),
+        "ffn_norm": jnp.ones((L, d), dt),
+    }
+    if cfg.attention == "mla":
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        blk.update({
+            "wq_a": dense_init(keys[2], (L, d, cfg.q_lora_rank), 1, dt),
+            "wq_b": dense_init(keys[3], (L, cfg.q_lora_rank, cfg.n_heads, qk), 1, dt),
+            "wkv_a": dense_init(keys[4], (L, d, cfg.kv_lora_rank + cfg.qk_rope_dim), 1, dt),
+            "wkv_b": dense_init(keys[5], (L, cfg.kv_lora_rank, cfg.n_heads,
+                                          cfg.qk_nope_dim + cfg.v_head_dim), 1, dt),
+            "wo": dense_init(keys[6], (L, cfg.n_heads, cfg.v_head_dim, d), 1, dt),
+        })
+    else:
+        blk.update({
+            "wq": dense_init(keys[2], (L, d, cfg.n_heads, cfg.d_head), 1, dt),
+            "wk": dense_init(keys[3], (L, d, cfg.n_kv_heads, cfg.d_head), 1, dt),
+            "wv": dense_init(keys[4], (L, d, cfg.n_kv_heads, cfg.d_head), 1, dt),
+            "wo": dense_init(keys[5], (L, cfg.n_heads, cfg.d_head, d), 1, dt),
+        })
+        if cfg.qkv_bias:
+            blk.update({
+                "bq": jnp.zeros((L, cfg.n_heads, cfg.d_head), dt),
+                "bk": jnp.zeros((L, cfg.n_kv_heads, cfg.d_head), dt),
+                "bv": jnp.zeros((L, cfg.n_kv_heads, cfg.d_head), dt),
+            })
+    if cfg.is_moe:
+        blk.update({
+            "router": dense_init(keys[7], (L, d, cfg.n_experts), 1, jnp.float32),
+            "moe_gate": dense_init(keys[8], (L, cfg.n_experts, d, cfg.d_ff), 1, dt),
+            "moe_up": dense_init(keys[9], (L, cfg.n_experts, d, cfg.d_ff), 1, dt),
+            "moe_down": dense_init(keys[10], (L, cfg.n_experts, cfg.d_ff, d), 1, dt),
+        })
+    if (not cfg.is_moe) or cfg.dense_residual:
+        blk.update({
+            "w_gate": dense_init(keys[11], (L, d, cfg.d_ff), 1, dt),
+            "w_up": dense_init(keys[12], (L, d, cfg.d_ff), 1, dt),
+            "w_down": dense_init(keys[13], (L, cfg.d_ff, d), 1, dt),
+        })
+    p["blocks"] = blk
+    return p
+
+
+def param_axes(cfg: TransformerConfig):
+    """Logical-axis names per param tensor (leading layer axis = 'layer')."""
+    ax: Dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "unembed": ("embed", "vocab"),
+        "final_norm": ("embed",),
+    }
+    blk: Dict[str, Any] = {
+        "attn_norm": ("layer", "embed"),
+        "ffn_norm": ("layer", "embed"),
+    }
+    if cfg.attention == "mla":
+        blk.update({
+            "wq_a": ("layer", "embed", "qk_lora"),
+            "wq_b": ("layer", "qk_lora", "heads", "head_dim"),
+            "wkv_a": ("layer", "embed", "qk_lora"),
+            "wkv_b": ("layer", "qk_lora", "heads", "head_dim"),
+            "wo": ("layer", "heads", "head_dim", "embed"),
+        })
+    else:
+        blk.update({
+            "wq": ("layer", "embed", "heads", "head_dim"),
+            "wk": ("layer", "embed", "kv_heads", "head_dim"),
+            "wv": ("layer", "embed", "kv_heads", "head_dim"),
+            "wo": ("layer", "heads", "head_dim", "embed"),
+        })
+        if cfg.qkv_bias:
+            blk.update({
+                "bq": ("layer", "heads", "head_dim"),
+                "bk": ("layer", "kv_heads", "head_dim"),
+                "bv": ("layer", "kv_heads", "head_dim"),
+            })
+    if cfg.is_moe:
+        blk.update({
+            "router": ("layer", "embed", "expert_dim"),
+            "moe_gate": ("layer", "expert", "embed", "mlp"),
+            "moe_up": ("layer", "expert", "embed", "mlp"),
+            "moe_down": ("layer", "expert", "mlp", "embed"),
+        })
+    if (not cfg.is_moe) or cfg.dense_residual:
+        blk.update({
+            "w_gate": ("layer", "embed", "mlp"),
+            "w_up": ("layer", "embed", "mlp"),
+            "w_down": ("layer", "mlp", "embed"),
+        })
+    return {"embed": ax["embed"], "unembed": ax["unembed"],
+            "final_norm": ax["final_norm"], "blocks": blk}
+
+
+# ----------------------------------------------------------------------- rope
+def rope(x, positions, theta: float):
+    """Rotary embedding over the last dim of x [..., S, H, hd]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ flash attention
+def _online_softmax_block(q, k, v, mask, state, scale):
+    """One kv-block step of online softmax.
+
+    q [B,qc,H,hd]; k/v [B,kc,H,hd] — already broadcast to the full head
+    dim so 'model' shards H cleanly (a grouped (g, rep) layout defeats
+    GSPMD when g < mesh model size; the repeat costs kc*H*hd per block,
+    negligible next to the score tensor)."""
+    m_prev, l_prev, acc = state
+    s = jnp.einsum("bqhd,bkhd->bqhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(mask[:, :, None, :], s, -1e30)
+    s = constrain(s, "batch", None, "model", None)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("bqhk,bkhd->bqhd", p, v.astype(jnp.float32))
+    acc = acc * alpha[..., None] + pv
+    return m_new, l_new, acc
+
+
+def flash_attention(q, k, v, *, causal: bool, window: Optional[int],
+                    q_offset, q_block: int, kv_block: int, scale: float):
+    """Blockwise attention. q [B,Sq,H,hd]; k,v [B,Skv,G,hd].
+
+    ``q_offset`` is the global position of q[0] relative to k[0]
+    (prefill: 0; chunked decode would pass cache_len).
+    Memory: O(q_block * kv_block) per step — never materializes S^2.
+    """
+    b, sq, h, hd = q.shape
+    skv, g = k.shape[1], k.shape[2]
+    hd_v = v.shape[3]                      # MLA: v head dim != qk head dim
+    rep = h // g
+    if rep > 1:                            # GQA: broadcast KV to all heads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    # Pad heads to a model-axis multiple (arctic 56, minicpm3 40 are not
+    # divisible by model=16): the padded heads cost <= 20% extra attention
+    # FLOPs but let every score/accumulator tensor shard 16x over 'model'
+    # — the §Perf fix for the worst-fraction cells. Padded heads are
+    # sliced away before the output projection.
+    h_orig = h
+    m = model_axis_size()
+    if m > 1 and h % m != 0:
+        h_pad = -(-h // m) * m
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, h_pad - h), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, h_pad - h), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, h_pad - h), (0, 0)))
+        h = h_pad
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    # pad to block multiples
+    sq_p = -(-sq // qb) * qb
+    skv_p = -(-skv // kb) * kb
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    nq, nk = sq_p // qb, skv_p // kb
+
+    # Batch and heads stay pinned through the block loops — XLA's
+    # propagation loses them through nested scan carries otherwise (caught
+    # by the dry-run roofline: unsharded score tensors + TB-scale
+    # all-reduces; EXPERIMENTS.md §Perf).
+    bspec = (None, "batch", None, "model", None)
+    q_blocks = constrain(q.reshape(b, nq, qb, h, hd)
+                         .transpose(1, 0, 2, 3, 4), *bspec)
+    k_blocks = constrain(k.reshape(b, nk, kb, h, hd)
+                         .transpose(1, 0, 2, 3, 4), *bspec)
+    v_blocks = constrain(v.reshape(b, nk, kb, h, hd_v)
+                         .transpose(1, 0, 2, 3, 4), *bspec)
+
+    def q_step(_, qi_qblk):
+        qi, qblk = qi_qblk
+        qblk = constrain(qblk, "batch", None, "model", None)
+        qpos = q_offset + qi * qb + jnp.arange(qb)
+
+        def kv_step(state, ki_kv):
+            ki, kblk, vblk = ki_kv
+            kblk = constrain(kblk, "batch", None, "model", None)
+            vblk = constrain(vblk, "batch", None, "model", None)
+            kpos = ki * kb + jnp.arange(kb)
+            mask = kpos[None, :] < skv  # padding mask
+            mask = jnp.broadcast_to(mask, (qb, kb))
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            mask = jnp.broadcast_to(mask[None], (b, qb, kb))
+            m_n, l_n, acc_n = _online_softmax_block(qblk, kblk, vblk, mask,
+                                                    state, scale)
+            m_n = constrain(m_n, "batch", None, "model")
+            l_n = constrain(l_n, "batch", None, "model")
+            acc_n = constrain(acc_n, "batch", None, "model", None)
+            return (m_n, l_n, acc_n), None
+
+        init = (constrain(jnp.full((b, qb, h), -1e30, jnp.float32),
+                          "batch", None, "model"),
+                constrain(jnp.zeros((b, qb, h), jnp.float32),
+                          "batch", None, "model"),
+                constrain(jnp.zeros((b, qb, h, hd_v), jnp.float32),
+                          "batch", None, "model", None))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), k_blocks, v_blocks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, constrain(out, "batch", None, "model", None)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), q_blocks))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq_p, h, hd_v)
+    out = out[:, :sq, :h_orig]             # drop seq + head padding
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, scale: float):
+    """Single-position attention against a (possibly sharded) KV cache.
+
+    q [B,1,H,hd]; caches [B,S,G,hd]. The softmax reductions over S become
+    all-reduces when S is sharded over the mesh (context parallelism).
+    """
+    b, _, h, hd = q.shape
+    s, g = k_cache.shape[1], k_cache.shape[2]
+    rep = h // g
+    qg = q.reshape(b, g, rep, hd)
+    scores = jnp.einsum("bgrd,bsgd->bgrs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, None, None, :] < cache_len[:, None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------------------ moe
+def _moe_groups(t: int) -> int:
+    """Number of dispatch groups = data-parallel shards of the token dim.
+
+    Routing/sort/scatter run WITHIN groups (GShard-style): a global sort
+    over data-sharded tokens cannot be partitioned — XLA materializes
+    unsharded [T*k, D] buffers and TB-scale all-reduces (caught by the
+    dry-run roofline; EXPERIMENTS.md §Perf). Group count comes from the
+    tracing mesh; 1 on a host CPU (identical math)."""
+    from repro.dist.act_sharding import _current_mesh
+
+    mesh = _current_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            g *= mesh.shape[a]
+    while g > 1 and t % g != 0:
+        g //= 2
+    return max(1, g)
+
+
+def moe_ffn(x, router_w, w_gate, w_up, w_down, cfg: TransformerConfig):
+    """Top-k token-choice MoE, sort-based capacity dispatch within
+    data-sharded groups. x [T, D] -> ([T, D], aux loss)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n_groups = _moe_groups(t)
+    tg = t // n_groups
+    cap = int(np.ceil(tg * k / e * cfg.capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)
+
+    xg = constrain(x.reshape(n_groups, tg, d), "batch", None, None)
+    logits = xg.astype(jnp.float32) @ router_w              # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                    # [G, Tg, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    def group_dispatch(xg_g, idx_g, gate_g):
+        """One group: tokens [Tg, D] -> expert buffer [E, C, D] and back."""
+        flat_expert = idx_g.reshape(-1)                     # [Tg*k]
+        flat_gate = gate_g.reshape(-1)
+        flat_token = jnp.repeat(jnp.arange(tg), k)
+        order = jnp.argsort(flat_expert)
+        sorted_expert = flat_expert[order]
+        sorted_token = flat_token[order]
+        sorted_gate = flat_gate[order]
+        seg_start = jnp.searchsorted(sorted_expert, jnp.arange(e),
+                                     side="left")
+        pos = jnp.arange(tg * k) - seg_start[sorted_expert]
+        keep = pos < cap
+        safe_pos = jnp.where(keep, pos, cap - 1)
+        buf = jnp.zeros((e, cap, d), xg_g.dtype)
+        tok_vecs = xg_g[sorted_token] * keep[:, None].astype(xg_g.dtype)
+        buf = buf.at[sorted_expert, safe_pos].add(tok_vecs)
+        return buf, (sorted_expert, sorted_token, sorted_gate, keep,
+                     safe_pos)
+
+    buf, meta = jax.vmap(group_dispatch)(xg, idx, gates)    # [G, E, C, D]
+    buf = constrain(buf, "batch", "expert", None, None)     # EP all-to-all
+
+    g_act = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, w_gate))
+    u = jnp.einsum("gecd,edf->gecf", buf, w_up)
+    y = jnp.einsum("gecf,efd->gecd", g_act * u, w_down)     # [G, E, C, D]
+    y = constrain(y, "batch", "expert", None, None)
+
+    def group_combine(y_g, meta_g):
+        sorted_expert, sorted_token, sorted_gate, keep, safe_pos = meta_g
+        out_vecs = y_g[sorted_expert, safe_pos] \
+            * (sorted_gate * keep)[:, None].astype(y_g.dtype)
+        return jnp.zeros((tg, d), y_g.dtype).at[sorted_token].add(out_vecs)
+
+    out = jax.vmap(group_combine)(y, meta)                  # [G, Tg, D]
+    out = constrain(out, "batch", None, None).reshape(t, d)
+    # auxiliary load-balance loss (Switch): E * sum_e f_e * p_e
+    me = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32).mean((0, 1))
+    pe = probs.mean((0, 1))
+    aux = e * jnp.sum(me * pe)
+    return out, aux
+
+
+# --------------------------------------------------------------------- blocks
+def _attention_block(x, w, cfg: TransformerConfig, positions):
+    b, s, d = x.shape
+    if cfg.attention == "mla":
+        return _mla_block(x, w, cfg, positions)
+    q = jnp.einsum("bsd,dhk->bshk", x, w["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", x, w["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", x, w["wv"])
+    if cfg.qkv_bias:
+        q = q + w["bq"]
+        k = k + w["bk"]
+        v = v + w["bv"]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    window = cfg.window if cfg.attention == "swa" else None
+    o = flash_attention(q, k, v, causal=True, window=window, q_offset=0,
+                        q_block=cfg.q_block, kv_block=cfg.kv_block,
+                        scale=1.0 / np.sqrt(cfg.d_head))
+    return jnp.einsum("bshk,hkd->bsd", o, w["wo"])
+
+
+def _mla_block(x, w, cfg: TransformerConfig, positions):
+    """Multi-head latent attention (training/prefill path, up-projected)."""
+    b, s, d = x.shape
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    cq = x @ w["wq_a"]                                     # [B,S,rq]
+    q = jnp.einsum("bsr,rhk->bshk", cq, w["wq_b"])          # [B,S,H,qk]
+    ckv_full = x @ w["wkv_a"]                              # [B,S,rkv+rope]
+    ckv, k_rope = jnp.split(ckv_full, [cfg.kv_lora_rank], axis=-1)
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, w["wkv_b"])
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    k_rope = jnp.broadcast_to(k_rope, (b, s, cfg.n_heads, cfg.qk_rope_dim))
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, k_rope], axis=-1)
+    o = flash_attention(qf, kf, v, causal=True, window=None, q_offset=0,
+                        q_block=cfg.q_block, kv_block=cfg.kv_block,
+                        scale=1.0 / np.sqrt(qk))
+    return jnp.einsum("bshk,hkd->bsd", o, w["wo"])
+
+
+def _ffn_block(x, w, cfg: TransformerConfig):
+    b, s, d = x.shape
+    aux = jnp.zeros((), jnp.float32)
+    out = jnp.zeros_like(x)
+    if cfg.is_moe:
+        moe_out, aux = moe_ffn(x.reshape(b * s, d), w["router"],
+                               w["moe_gate"], w["moe_up"], w["moe_down"], cfg)
+        out = out + moe_out.reshape(b, s, d)
+    if (not cfg.is_moe) or cfg.dense_residual:
+        g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, w["w_gate"]))
+        u = jnp.einsum("bsd,df->bsf", x, w["w_up"])
+        out = out + jnp.einsum("bsf,fd->bsd", g * u, w["w_down"])
+    return out, aux
+
+
+def _layer(x, layer_w, cfg: TransformerConfig, positions):
+    h = _attention_block(rms_norm(x, layer_w["attn_norm"]), layer_w, cfg,
+                         positions)
+    x = x + h
+    f, aux = _ffn_block(rms_norm(x, layer_w["ffn_norm"]), layer_w, cfg)
+    return x + f, aux
+
+
+def _remat(fn, cfg: TransformerConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+# -------------------------------------------------------------------- forward
+def forward(params, tokens, cfg: TransformerConfig):
+    """tokens [B, S] -> logits [B, S, V] (+ aux losses)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(s)[None, :]
+
+    layer_fn = _remat(functools.partial(_layer, cfg=cfg, positions=positions),
+                      cfg)
+
+    def scan_body(x, layer_w):
+        x = constrain(x, "batch", None, None)
+        x, aux = layer_fn(x, layer_w)
+        return constrain(x, "batch", None, None), aux
+
+    x, auxes = jax.lax.scan(scan_body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    return logits, auxes.sum()
+
+
+def loss_fn(params, batch, cfg: TransformerConfig,
+            aux_weight: float = 0.01):
+    """Causal-LM cross entropy; stays sharded over (batch, vocab)."""
+    logits, aux = forward(params, batch["tokens"], cfg)
+    logits = logits.astype(jnp.float32)
+    tgt = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# -------------------------------------------------------------------- serving
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """Decode KV cache pytree. MLA caches the compressed latent (+ rope key)
+    — the memory win that motivates MLA; SWA caches only the window."""
+    L = cfg.n_layers
+    if cfg.attention == "mla":
+        return {
+            "ckv": jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), cfg.dtype),
+            "k_rope": jnp.zeros((L, batch, max_len, cfg.qk_rope_dim), cfg.dtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    s = min(max_len, cfg.window) if cfg.attention == "swa" else max_len
+    return {
+        "k": jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.d_head), cfg.dtype),
+        "v": jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.d_head), cfg.dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg: TransformerConfig):
+    if cfg.attention == "mla":
+        return {"ckv": ("layer", "batch", "cache_seq", "qk_lora"),
+                "k_rope": ("layer", "batch", "cache_seq", "head_dim"),
+                "len": ("batch",)}
+    return {"k": ("layer", "batch", "cache_seq", "kv_heads", "head_dim"),
+            "v": ("layer", "batch", "cache_seq", "kv_heads", "head_dim"),
+            "len": ("batch",)}
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig):
+    """One-token decode: tokens [B, 1] + cache -> (logits [B, V], cache).
+
+    Each layer appends its new K/V (at position cache["len"]) and attends
+    over the full cache; with the cache's seq axis sharded over 'model',
+    the softmax reductions become all-reduces (context parallelism).
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)         # [B, 1, D]
+    pos = cache["len"][:, None]                            # [B, 1]
+
+    new_cache = dict(cache)
+    L = cfg.n_layers
+
+    def body(i, carry):
+        x, cache_k, cache_v = carry
+        w = jax.tree.map(lambda p: p[i], params["blocks"])
+        xn = rms_norm(x, w["attn_norm"])
+        if cfg.attention == "mla":
+            raise NotImplementedError  # handled in decode_step_mla
+        q = jnp.einsum("bsd,dhk->bshk", xn, w["wq"])
+        k = jnp.einsum("bsd,dgk->bsgk", xn, w["wk"])
+        v = jnp.einsum("bsd,dgk->bsgk", xn, w["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        s_cache = cache_k.shape[2]
+        if cfg.attention == "swa":
+            slot = cache["len"] % s_cache                 # rolling window
+        else:
+            slot = cache["len"]
+        bidx = jnp.arange(b)
+        cache_k = cache_k.at[i, bidx, slot].set(k[:, 0])
+        cache_v = cache_v.at[i, bidx, slot].set(v[:, 0])
+        eff_len = jnp.minimum(cache["len"] + 1, s_cache) \
+            if cfg.attention == "swa" else cache["len"] + 1
+        o = decode_attention(q, cache_k[i], cache_v[i], eff_len,
+                             1.0 / np.sqrt(cfg.d_head))
+        x = x + jnp.einsum("bshk,hkd->bsd", o, w["wo"])
+        f, _ = _ffn_block(rms_norm(x, w["ffn_norm"]), w, cfg)
+        return x + f, cache_k, cache_v
+
+    x, ck, cv = jax.lax.fori_loop(0, L, body,
+                                  (x, cache["k"], cache["v"]))
+    new_cache["k"], new_cache["v"] = ck, cv
+    new_cache["len"] = cache["len"] + 1
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])[:, 0]
+    return logits, new_cache
+
+
+def decode_step_mla(params, cache, tokens, cfg: TransformerConfig):
+    """MLA decode with the latent cache: caches ckv [B,S,r] + k_rope."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    pos = cache["len"][:, None]
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    bidx = jnp.arange(b)
+
+    def body(i, carry):
+        x, c_ckv, c_rope = carry
+        w = jax.tree.map(lambda p: p[i], params["blocks"])
+        xn = rms_norm(x, w["attn_norm"])
+        cq = xn @ w["wq_a"]
+        q = jnp.einsum("bsr,rhk->bshk", cq, w["wq_b"])
+        q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+        q_rope = rope(q_rope, pos, cfg.rope_theta)
+        ckv_full = xn @ w["wkv_a"]
+        ckv, k_rope = jnp.split(ckv_full, [cfg.kv_lora_rank], axis=-1)
+        k_rope = rope(k_rope[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+        c_ckv = c_ckv.at[i, bidx, cache["len"]].set(ckv[:, 0])
+        c_rope = c_rope.at[i, bidx, cache["len"]].set(k_rope[:, 0])
+        # absorbed attention: score = q_nope^T (W_uk c) + q_rope^T k_rope
+        w_uk, w_uv = jnp.split(w["wkv_b"], [cfg.qk_nope_dim], axis=-1)
+        # fold q_nope through W_uk: [B,H,r]
+        q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], w_uk)
+        s_cache = c_ckv.shape[2]
+        scores = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                             c_ckv[i].astype(jnp.float32))
+                  + jnp.einsum("bhk,bsk->bhs",
+                               q_rope[:, 0].astype(jnp.float32),
+                               c_rope[i].astype(jnp.float32)))
+        scores = scores / np.sqrt(qk)
+        valid = jnp.arange(s_cache)[None, None, :] <= cache["len"][:, None, None]
+        scores = jnp.where(valid, scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        # value: o_h = sum_s p (W_uv c_s) = (sum_s p c_s) W_uv
+        ctx = jnp.einsum("bhs,bsr->bhr", p, c_ckv[i].astype(jnp.float32))
+        o = jnp.einsum("bhr,rhk->bhk", ctx, w_uv.astype(jnp.float32))
+        x = x + jnp.einsum("bhk,hkd->bd", o.astype(cfg.dtype),
+                           w["wo"])[:, None, :]
+        f, _ = _ffn_block(rms_norm(x, w["ffn_norm"]), w, cfg)
+        return x + f, c_ckv, c_rope
+
+    x, ckv, krope = jax.lax.fori_loop(
+        0, cfg.n_layers, body, (x, cache["ckv"], cache["k_rope"]))
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])[:, 0]
+    return logits, {"ckv": ckv, "k_rope": krope, "len": cache["len"] + 1}
+
+
+def prefill(params, tokens, cfg: TransformerConfig, max_len: int):
+    """Run the full prompt, returning (logits of last position, cache)."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len)
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.arange(s)[None, :]
+
+    if cfg.attention == "mla":
+        def body(i, carry):
+            x, c_ckv, c_rope = carry
+            w = jax.tree.map(lambda p: p[i], params["blocks"])
+            xn = rms_norm(x, w["attn_norm"])
+            ckv_full = xn @ w["wkv_a"]
+            ckv, k_rope = jnp.split(ckv_full, [cfg.kv_lora_rank], axis=-1)
+            k_rope_r = rope(k_rope[:, :, None, :], positions,
+                            cfg.rope_theta)[:, :, 0]
+            c_ckv = c_ckv.at[i, :, :s].set(ckv)
+            c_rope = c_rope.at[i, :, :s].set(k_rope_r)
+            h = _mla_block(xn, w, cfg, positions)
+            x = x + h
+            f, _ = _ffn_block(rms_norm(x, w["ffn_norm"]), w, cfg)
+            return x + f, c_ckv, c_rope
+
+        x, ckv, krope = jax.lax.fori_loop(
+            0, cfg.n_layers, body, (x, cache["ckv"], cache["k_rope"]))
+        cache = {"ckv": ckv, "k_rope": krope,
+                 "len": jnp.full((b,), s, jnp.int32)}
+    else:
+        s_cache = cache["k"].shape[2]
+
+        def body(i, carry):
+            x, ck, cv = carry
+            w = jax.tree.map(lambda p: p[i], params["blocks"])
+            xn = rms_norm(x, w["attn_norm"])
+            q = jnp.einsum("bsd,dhk->bshk", xn, w["wq"])
+            k = jnp.einsum("bsd,dgk->bsgk", xn, w["wk"])
+            v = jnp.einsum("bsd,dgk->bsgk", xn, w["wv"])
+            if cfg.qkv_bias:
+                q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            if s_cache < s:
+                # rolling window: position p lives at slot p % s_cache so
+                # decode_step's (len % s_cache) writes land consistently;
+                # slots of the kept tail form a rotation — permute the tail
+                # into slot order and write contiguously
+                tail_pos = np.arange(s - s_cache, s)
+                inv = np.argsort(tail_pos % s_cache)
+                ck = ck.at[i, :, :s_cache].set(k[:, -s_cache:][:, inv])
+                cv = cv.at[i, :, :s_cache].set(v[:, -s_cache:][:, inv])
+            else:
+                ck = ck.at[i, :, :s].set(k)
+                cv = cv.at[i, :, :s].set(v)
+            window = cfg.window if cfg.attention == "swa" else None
+            o = flash_attention(q, k, v, causal=True, window=window,
+                                q_offset=0, q_block=cfg.q_block,
+                                kv_block=cfg.kv_block,
+                                scale=1.0 / np.sqrt(cfg.d_head))
+            x = x + jnp.einsum("bshk,hkd->bsd", o, w["wo"])
+            f, _ = _ffn_block(rms_norm(x, w["ffn_norm"]), w, cfg)
+            return x + f, ck, cv
+
+        x, ck, cv = jax.lax.fori_loop(0, cfg.n_layers, body,
+                                      (x, cache["k"], cache["v"]))
+        cache = {"k": ck, "v": cv, "len": jnp.full((b,), s, jnp.int32)}
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"])
+    return logits, cache

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, clip_by_global_norm, sgd_momentum,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule, cosine_schedule, linear_warmup_cosine,
+)

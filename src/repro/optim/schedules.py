@@ -1,0 +1,27 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(lr, max(1, total_steps - warmup_steps), final_frac)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(1, warmup_steps)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return fn

@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeEngine, make_decode_fn, make_prefill_fn  # noqa: F401

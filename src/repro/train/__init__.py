@@ -1,0 +1,2 @@
+from repro.train.step import TrainState, make_train_step  # noqa: F401
+from repro.train.loop import train_loop  # noqa: F401

@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
+the 1 real CPU device; only launch/dryrun.py (a subprocess in tests) forces
+512 placeholder devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_undirected_graph(n: int, p: float, seed: int = 0):
+    """Symmetric edge list (both directions), no self loops."""
+    r = np.random.default_rng(seed)
+    a = r.random((n, n)) < p
+    a = np.triu(a, 1)
+    a = a | a.T
+    src, dst = np.nonzero(a)
+    return src.astype(np.int64), dst.astype(np.int64), a
+
+
+def brute_triangle_count(adj: np.ndarray) -> int:
+    """Count undirected triangles by trace(A^3)/6."""
+    a = adj.astype(np.int64)
+    return int(np.trace(a @ a @ a) // 6)

@@ -1,0 +1,122 @@
+"""Data substrate tests: generators, orderings, pruning, sampler, pipelines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (NeighborSampler, RecsysBatchGen, TokenPipeline,
+                        kronecker_graph, molecule_batch, powerlaw_graph)
+from repro.graph import (ORDERINGS, apply_ordering, density_skew,
+                         graph_stats, order_nodes, prune_symmetric)
+from repro.graph.dictionary import Dictionary, encode_edges
+
+
+def test_powerlaw_graph_structure():
+    g = powerlaw_graph(500, 8, 2.0, seed=1)
+    assert g.n == 500
+    # symmetric: every edge has its reverse
+    src = np.repeat(np.arange(g.n), g.degrees)
+    fwd = set(zip(src.tolist(), g.neighbors.tolist()))
+    assert all((v, u) in fwd for (u, v) in list(fwd)[:200])
+    # no self loops
+    assert all(u != v for (u, v) in list(fwd)[:500])
+
+
+def test_kronecker_graph():
+    g = kronecker_graph(8, 8, seed=2)
+    assert g.n == 256 and g.m > 0
+    s = graph_stats(g)
+    assert s["max_degree"] > s["mean_degree"]  # skewed
+
+
+@pytest.mark.parametrize("method", sorted(ORDERINGS))
+def test_ordering_is_permutation(method):
+    g = powerlaw_graph(300, 6, 2.2, seed=3)
+    perm = order_nodes(g, method, seed=0)
+    assert sorted(perm.tolist()) == list(range(g.n))
+    g2 = apply_ordering(g, perm)
+    assert g2.m == g.m
+    # degree multiset preserved
+    assert sorted(g.degrees.tolist()) == sorted(g2.degrees.tolist())
+
+
+def test_degree_ordering_sorts_by_degree():
+    g = powerlaw_graph(200, 6, 2.0, seed=4)
+    perm = order_nodes(g, "degree")
+    g2 = apply_ordering(g, perm)
+    d = g2.degrees
+    assert (np.diff(d) <= 0).all() or (np.sort(d)[::-1] == d).all()
+
+
+def test_prune_halves_symmetric_edges():
+    g = powerlaw_graph(200, 6, 2.0, seed=5)
+    p = prune_symmetric(g)
+    assert p.m * 2 == g.m
+    src = np.repeat(np.arange(p.n), p.degrees)
+    assert (src > p.neighbors).all()
+
+
+def test_density_skew_orders():
+    low = powerlaw_graph(500, 8, 3.0, seed=6)   # flatter
+    high = powerlaw_graph(500, 8, 1.7, seed=6)  # heavier tail
+    assert density_skew(high) != density_skew(low)
+
+
+def test_sampler_shapes_and_membership():
+    g = powerlaw_graph(400, 8, 2.0, seed=7)
+    s = NeighborSampler(g, (5, 3), seed=0)
+    batch = s.sample(np.arange(32))
+    assert batch.blocks[0].nodes.shape == (32 * 5,)
+    assert batch.blocks[1].nodes.shape == (32 * 5 * 3,)
+    # sampled hop-1 nodes are real neighbors (or self for deg-0)
+    for i, seed_node in enumerate(batch.seeds[:8]):
+        nbrs = set(g.neighbors_of(int(seed_node)).tolist()) | {int(seed_node)}
+        got = set(batch.blocks[0].nodes[i * 5:(i + 1) * 5].tolist())
+        assert got <= nbrs
+
+
+def test_token_pipeline_deterministic():
+    p = TokenPipeline(1000, 4, 16, seed=3)
+    a = p.batch_at(7)
+    b = p.batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = p.batch_at(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].max() < 1000
+    # restore reproduces the stream (checkpoint/restart invariant)
+    p2 = TokenPipeline.restore(p.state(7), 1000, 4, 16)
+    np.testing.assert_array_equal(p2.batch_at(7)["tokens"], a["tokens"])
+
+
+def test_recsys_batchgen():
+    g = RecsysBatchGen(39, 10_000, 64, seed=1)
+    b = g.batch_at(0)
+    assert b["ids"].shape == (64, 39) and b["ids"].max() < 10_000
+    assert set(np.unique(b["label"])) <= {0.0, 1.0}
+    np.testing.assert_array_equal(b["ids"], g.batch_at(0)["ids"])
+
+
+def test_molecule_batch_edges_within_cutoff():
+    pos, sp, snd, rcv, mask = molecule_batch(3, cutoff=5.0, seed=2)
+    for b in range(3):
+        for e in range(snd.shape[1]):
+            if mask[b, e]:
+                d = np.linalg.norm(pos[b, snd[b, e]] - pos[b, rcv[b, e]])
+                assert d < 5.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(vals=st.lists(st.text(min_size=1, max_size=5), min_size=1,
+                     max_size=50))
+def test_dictionary_roundtrip(vals):
+    d = Dictionary.build(vals)
+    enc = d.encode(vals)
+    assert d.decode(enc) == list(vals)
+    assert enc.max() < d.size
+
+
+def test_encode_edges():
+    src = ["a", "b", "a"]
+    dst = ["b", "c", "c"]
+    s, t, d = encode_edges(src, dst)
+    assert len(s) == 3 and d.size == 3
+    assert d.decode(s) == src and d.decode(t) == dst

@@ -1,0 +1,67 @@
+"""HLO structural analyzer: trip-count multipliers, dot flops, collective
+bytes — validated against a controlled sharded-scan program."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def run_probe(code: str) -> str:
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd="/root/repo")
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_analyzer_exact_on_scan():
+    """flops and collective bytes must multiply by the scan trip count."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch.hlo_analysis import analyze
+
+mesh = jax.make_mesh((4, 4), ("data", "model"))
+def g(x, w):
+    def body(c, _):
+        return jnp.tanh((c @ w) @ w.T), None
+    y, _ = jax.lax.scan(body, x, None, length=7)
+    return y
+with jax.set_mesh(mesh):
+    xs = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    comp = jax.jit(g, in_shardings=(NamedSharding(mesh, P("data", "model")),
+                                    NamedSharding(mesh, P("model", None)))
+                   ).lower(xs, ws).compile()
+    st = analyze(comp.as_text())
+    exp_flops = 2 * 2 * 64 * 256 * 512 / 16 * 7       # per-device
+    exp_ar = 16 * 512 * 4 * 7                          # all-reduce bytes
+    assert abs(st.flops - exp_flops) / exp_flops < 1e-6, st.flops
+    assert abs(st.coll["all-reduce"] - exp_ar) / exp_ar < 1e-6
+    assert 7 in st.while_trips.values()
+    assert st.bytes_accessed > 0
+    print("ANALYZER_OK")
+"""
+    assert "ANALYZER_OK" in run_probe(code)
+
+
+def test_collective_parse_units():
+    from repro.launch.hlo_analysis import _type_bytes
+    assert _type_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert _type_bytes("f32[]") == 4
+    assert _type_bytes("(f32[2,2], s32[4])") == 16 + 16
+    assert _type_bytes("pred[16]") == 16
+
+
+def test_roofline_terms():
+    from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, Roofline
+    r = Roofline(flops=197e12, bytes_accessed=819e9, coll_bytes=0,
+                 coll_breakdown={}, chips=256, model_flops=197e12 * 256)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.bottleneck in ("compute", "memory")
+    assert r.mfu == pytest.approx(1.0)
+    assert r.useful_flop_frac == pytest.approx(1.0)

@@ -1,0 +1,150 @@
+"""Layout optimizer + set-intersection properties (paper §4), with
+hypothesis property tests on the core invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import intersect as I
+from repro.core.layouts import (HybridSetStore, decide_relation_level,
+                                decide_set_level, set_ranges)
+from repro.core.trie import CSRGraph
+from repro.kernels.bitset_intersect.ops import as_word_kernel
+
+
+def random_csr(n, mean_deg, seed):
+    rng = np.random.default_rng(seed)
+    deg = rng.poisson(mean_deg, n)
+    src = np.repeat(np.arange(n), deg)
+    dst = rng.integers(0, n, len(src))
+    keep = src != dst
+    return CSRGraph.from_edges(src[keep], dst[keep], n=n)
+
+
+# ------------------------------------------------------------- decision rule
+def test_algorithm3_rule():
+    """bitset iff range/|S| < SIMD width (paper Algorithm 3)."""
+    # dense set: 0..99 complete -> inverse density 1
+    src = np.zeros(100, np.int64)
+    dst = np.arange(100)
+    csr = CSRGraph.from_edges(src, dst, n=100)
+    d = decide_set_level(csr, threshold=256)
+    assert 0 in d.dense_ids
+    # sparse set: two values 10^6 apart
+    csr2 = CSRGraph.from_edges(np.zeros(2, np.int64),
+                               np.array([0, 10**6]), n=10**6 + 1)
+    d2 = decide_set_level(csr2, threshold=256)
+    assert 0 in d2.sparse_ids
+
+
+def test_set_ranges(rng):
+    csr = random_csr(50, 4, 0)
+    r = set_ranges(csr)
+    for u in range(csr.n):
+        nb = csr.neighbors_of(u)
+        want = (nb.max() - nb.min() + 1) if len(nb) else 0
+        assert r[u] == want
+
+
+def test_relation_level_is_all_one_layout():
+    csr = random_csr(40, 3, 1)
+    d = decide_relation_level(csr, force="uint")
+    assert len(d.dense_ids) == 0
+
+
+# ----------------------------------------------------- intersection oracles
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 120), mean=st.floats(1, 12),
+       seed=st.integers(0, 10_000), threshold=st.sampled_from([64, 256, 4096]))
+def test_hybrid_store_matches_numpy(n, mean, seed, threshold):
+    """Routing through any layout combination preserves exact counts —
+    the system invariant behind the paper's Table 4 study."""
+    csr = random_csr(n, mean, seed)
+    rng = np.random.default_rng(seed + 1)
+    u = rng.integers(0, n, 50)
+    v = rng.integers(0, n, 50)
+    store = HybridSetStore.build(csr, threshold=threshold)
+    got = store.intersect_count(u, v)
+    want = I.intersect_count_uint_np(csr.offsets, csr.neighbors, u, v)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_engine_layout_modes_agree():
+    """The engine's terminal fold routed through set/uint/off layout modes
+    must produce identical counts (the -R ablation's invariant)."""
+    from repro.core.engine import Engine
+    from repro.core.layouts import set_engine_layout_mode
+
+    rng = np.random.default_rng(9)
+    n = 60
+    a = rng.random((n, n)) < 0.2
+    a = np.triu(a, 1)
+    a = a | a.T
+    src, dst = np.nonzero(a)
+    counts = {}
+    try:
+        for mode in ("set", "uint", "off"):
+            set_engine_layout_mode(mode)
+            eng = Engine()
+            eng.load_edges("Edge", src, dst)
+            for al in ("R", "S", "T"):
+                eng.alias(al, "Edge")
+            counts[mode] = int(eng.query(
+                "T(;w:long) :- R(x,y),S(y,z),T(x,z); w=<<COUNT(*)>>.")
+                .scalar())
+    finally:
+        set_engine_layout_mode("set")
+    assert counts["set"] == counts["uint"] == counts["off"]
+
+
+def test_hybrid_store_with_pallas_kernel():
+    csr = random_csr(200, 8, 3)
+    rng = np.random.default_rng(4)
+    u = rng.integers(0, 200, 100)
+    v = rng.integers(0, 200, 100)
+    store = HybridSetStore.build(csr,
+                                 word_kernel=as_word_kernel(interpret=True))
+    got = store.intersect_count(u, v)
+    want = I.intersect_count_uint_np(csr.offsets, csr.neighbors, u, v)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sa=st.integers(0, 60), sb=st.integers(0, 60), hi=st.integers(64, 2000),
+       seed=st.integers(0, 1000))
+def test_segment_search_min_property_oracle(sa, sb, hi, seed):
+    """The lockstep search intersection equals numpy for arbitrary pairs."""
+    rng = np.random.default_rng(seed)
+    a = np.sort(rng.choice(hi, min(sa, hi), replace=False)).astype(np.int32)
+    b = np.sort(rng.choice(hi, min(sb, hi), replace=False)).astype(np.int32)
+    values = np.concatenate([a, b])
+    offsets = np.array([0, len(a), len(a) + len(b)], dtype=np.int64)
+    got = I.intersect_count_uint(offsets, values, np.array([0]),
+                                 np.array([1]))[0]
+    assert got == len(np.intersect1d(a, b))
+
+
+def test_blocked_bitset_roundtrip(rng):
+    csr = random_csr(80, 6, 5)
+    ids = np.flatnonzero(csr.degrees > 0)[:20]
+    bs = I.build_blocked_bitset(csr.offsets, csr.neighbors, ids, csr.n, 256)
+    # popcount of all blocks of set i == degree(i) (sets are deduped)
+    card = I.popcount_u32_np(bs.words).sum(axis=1)
+    for slot, nid in enumerate(ids):
+        lo, hi = bs.offsets[slot], bs.offsets[slot + 1]
+        assert card[lo:hi].sum() == len(np.unique(csr.neighbors_of(nid)))
+
+
+def test_uint_bitset_cross_layout(rng):
+    csr = random_csr(100, 10, 6)
+    d = decide_set_level(csr, threshold=4096)  # force many dense
+    if len(d.dense_ids) == 0 or len(d.sparse_ids) == 0:
+        pytest.skip("degenerate split")
+    bs = I.build_blocked_bitset(csr.offsets, csr.neighbors, d.dense_ids,
+                                csr.n, 256)
+    u = d.sparse_ids[:10]
+    v = d.dense_ids[:10][:len(u)]
+    u = u[:len(v)]
+    got = I.uint_bitset_intersect_count(csr.offsets, csr.neighbors, u, bs,
+                                        bs.slot_of[v])
+    want = I.intersect_count_uint_np(csr.offsets, csr.neighbors, u, v)
+    np.testing.assert_array_equal(got, want)

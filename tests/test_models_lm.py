@@ -1,0 +1,163 @@
+"""LM transformer tests: every attention/FFN variant fwd+bwd, flash vs
+naive attention equivalence, prefill/decode == full-forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as tfm
+
+
+def tiny(name, **kw):
+    base = dict(name=name, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                d_ff=128, vocab=97, d_head=16, dtype=jnp.float32,
+                q_block=8, kv_block=8)
+    base.update(kw)
+    return tfm.TransformerConfig(**base)
+
+
+VARIANTS = {
+    "dense": tiny("dense"),
+    "qkv_bias": tiny("qkv_bias", qkv_bias=True),
+    "swa": tiny("swa", attention="swa", window=6),
+    "moe": tiny("moe", n_experts=4, top_k=2),
+    "moe_dense_residual": tiny("moe_dense_residual", n_experts=4, top_k=2,
+                               dense_residual=True),
+    "mla": tiny("mla", attention="mla", n_kv_heads=4, q_lora_rank=32,
+                kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+                v_head_dim=16),
+}
+
+
+@pytest.mark.parametrize("variant", list(VARIANTS))
+def test_forward_backward(variant):
+    cfg = VARIANTS[variant]
+    key = jax.random.PRNGKey(0)
+    p = tfm.init(key, cfg)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    logits, aux = tfm.forward(p, toks, cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert jnp.isfinite(logits).all()
+    batch = {"tokens": toks, "targets": toks}
+    loss, _ = tfm.loss_fn(p, batch, cfg)
+    grads = jax.grad(lambda p: tfm.loss_fn(p, batch, cfg)[0])(p)
+    assert jnp.isfinite(loss)
+    for g in jax.tree.leaves(grads):
+        assert jnp.isfinite(g).all()
+
+
+@pytest.mark.parametrize("variant", list(VARIANTS))
+def test_param_axes_matches_params(variant):
+    cfg = VARIANTS[variant]
+    p = jax.eval_shape(lambda k: tfm.init(k, cfg), jax.random.PRNGKey(0))
+    ax = tfm.param_axes(cfg)
+    flat_p = jax.tree_util.tree_flatten_with_path(p)[0]
+    flat_a = jax.tree_util.tree_flatten_with_path(
+        ax, is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x))[0]
+    assert len(flat_p) == len(flat_a)
+    paths_p = {tuple(str(x) for x in k) for k, _ in flat_p}
+    paths_a = {tuple(str(x) for x in k) for k, _ in flat_a}
+    assert paths_p == paths_a
+    for (kp, leaf), (ka, axes) in zip(sorted(flat_p, key=lambda t: str(t[0])),
+                                      sorted(flat_a, key=lambda t: str(t[0]))):
+        assert len(axes) == leaf.ndim, (kp, axes, leaf.shape)
+
+
+def naive_attention(q, k, v, causal, window, scale):
+    b, s, h, hd = q.shape
+    g = k.shape[2]
+    kk = jnp.repeat(k, h // g, axis=2)
+    vv = jnp.repeat(v, h // g, axis=2)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * scale
+    i, j = jnp.meshgrid(jnp.arange(s), jnp.arange(s), indexing="ij")
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= i >= j
+    if window is not None:
+        mask &= i - j < window
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), vv)
+
+
+@pytest.mark.parametrize("window", [None, 5])
+@pytest.mark.parametrize("qb,kb", [(8, 8), (4, 16), (24, 24), (7, 9)])
+def test_flash_vs_naive(window, qb, kb):
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    B, S, H, G, hd = 2, 24, 4, 2, 16
+    q = jax.random.normal(k1, (B, S, H, hd))
+    k = jax.random.normal(k2, (B, S, G, hd))
+    v = jax.random.normal(k3, (B, S, G, hd))
+    got = tfm.flash_attention(q, k, v, causal=True, window=window,
+                              q_offset=0, q_block=qb, kv_block=kb,
+                              scale=0.25)
+    want = naive_attention(q, k, v, True, window, 0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("variant", ["dense", "qkv_bias", "swa"])
+def test_prefill_decode_match_forward(variant):
+    cfg = VARIANTS[variant]
+    key = jax.random.PRNGKey(2)
+    p = tfm.init(key, cfg)
+    toks = jax.random.randint(key, (2, 12), 0, cfg.vocab)
+    full, _ = tfm.forward(p, toks, cfg)
+    lg, cache = tfm.prefill(p, toks[:, :8], cfg, max_len=16)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 7]),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(8, 12):
+        lg, cache = tfm.decode_step(p, cache, toks[:, t:t + 1], cfg)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_mla_decode_matches_forward():
+    cfg = VARIANTS["mla"]
+    key = jax.random.PRNGKey(3)
+    p = tfm.init(key, cfg)
+    toks = jax.random.randint(key, (2, 12), 0, cfg.vocab)
+    full, _ = tfm.forward(p, toks, cfg)
+    lg, cache = tfm.prefill(p, toks[:, :8], cfg, max_len=16)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 7]),
+                               rtol=5e-3, atol=5e-3)
+    for t in range(8, 12):
+        lg, cache = tfm.decode_step_mla(p, cache, toks[:, t:t + 1], cfg)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=1e-2, atol=1e-2)
+
+
+def test_mla_cache_is_compressed():
+    """The MLA cache must store the latent, not full K/V — the memory win
+    that motivates MLA."""
+    cfg = VARIANTS["mla"]
+    cache = jax.eval_shape(lambda: tfm.init_cache(cfg, 2, 16))
+    full_kv_floats = 2 * cfg.n_layers * 2 * 16 * cfg.n_heads \
+        * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+    lat_floats = sum(int(np.prod(v.shape)) for k, v in cache.items()
+                     if k != "len")
+    assert lat_floats < full_kv_floats / 3
+
+
+def test_swa_cache_is_windowed():
+    cfg = VARIANTS["swa"]
+    cache = jax.eval_shape(lambda: tfm.init_cache(cfg, 2, 512))
+    assert cache["k"].shape[2] == cfg.window  # rolling window, not 512
+
+
+def test_moe_load_balance_aux_positive():
+    cfg = VARIANTS["moe"]
+    p = tfm.init(jax.random.PRNGKey(4), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0, cfg.vocab)
+    _, aux = tfm.forward(p, toks, cfg)
+    assert float(aux) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz, = E at uniform
+
+
+def test_param_count_matches_init():
+    for cfg in VARIANTS.values():
+        p = jax.eval_shape(lambda k: tfm.init(k, cfg), jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+        analytic = cfg.param_count()
+        # analytic excludes norm gammas; allow 2% slack
+        assert abs(actual - analytic) / actual < 0.02, cfg.name

@@ -1,0 +1,106 @@
+"""Shape-aware sharding resolver unit tests (AbstractMesh — no devices)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.dist.sharding import (GNN_RULES, LM_RULES, RECSYS_RULES,
+                                 _resolve_one, resolve_batch_specs,
+                                 resolve_param_specs, zero1_specs)
+
+SDS = jax.ShapeDtypeStruct
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_heads_divisible_shards_on_model():
+    # qwen2-like: 64 heads % 16 == 0 -> heads take 'model'
+    spec = _resolve_one(("layer", "embed", "heads", "head_dim"),
+                        (80, 8192, 64, 128), MESH, LM_RULES, fsdp=True)
+    assert spec[2] == "model"
+    assert "data" in spec  # FSDP binds data somewhere
+
+
+def test_heads_fallback_to_embed():
+    # arctic-like: 56 heads % 16 != 0 -> 'model' falls back to embed dim
+    spec = _resolve_one(("layer", "embed", "heads", "head_dim"),
+                        (35, 7168, 56, 128), MESH, LM_RULES, fsdp=False)
+    assert spec[2] is None
+    assert spec[1] == "model"
+
+
+def test_no_duplicate_mesh_axes():
+    spec = _resolve_one(("layer", "embed", "mlp"),
+                        (32, 4096, 14336), MESH, LM_RULES, fsdp=True)
+    used = [a for a in spec if a is not None]
+    assert len(used) == len(set(used))
+
+
+def test_fsdp_threshold():
+    small = _resolve_one(("layer", "embed"), (2, 64), MESH, LM_RULES,
+                         fsdp=True)
+    assert all(a is None for a in small)  # below fsdp_min_size: replicated
+
+
+def test_expert_sharding():
+    spec = _resolve_one(("layer", "expert", "embed", "mlp"),
+                        (35, 128, 7168, 4864), MESH, LM_RULES, fsdp=True)
+    assert spec[1] == "model"  # 128 % 16 == 0 -> EP
+    assert "data" in spec      # FSDP on a remaining dim
+
+
+def test_expert_not_divisible():
+    spec = _resolve_one(("layer", "expert", "embed", "mlp"),
+                        (32, 8, 4096, 14336), MESH, LM_RULES, fsdp=False)
+    assert spec[1] is None     # 8 % 16 != 0
+    assert spec[3] == "model"  # falls to mlp (higher priority than embed)
+
+
+def test_zero1_adds_data_axis():
+    params = {"w": SDS((64, 14336), np.float32)}
+    pspecs = {"w": P(None, "model")}
+    z = zero1_specs(pspecs, params, MESH, LM_RULES)
+    assert z["w"] == P("data", "model") or z["w"][0] == "data"
+
+
+def test_batch_specs_compose_pod_data():
+    specs = resolve_batch_specs({"tokens": ("batch", None)},
+                                {"tokens": SDS((256, 4096), np.int32)},
+                                MESH3, LM_RULES)
+    assert specs["tokens"][0] == ("pod", "data")
+
+
+def test_batch_specs_indivisible_replicates():
+    specs = resolve_batch_specs({"tokens": ("batch", None)},
+                                {"tokens": SDS((3, 4096), np.int32)},
+                                MESH3, LM_RULES)
+    assert specs["tokens"][0] is None
+
+
+def test_cache_spec_no_duplicates():
+    axes = {"ckv": ("layer", "batch", "cache_seq", "qk_lora")}
+    sds = {"ckv": SDS((62, 128, 32768, 256), np.float32)}
+    specs = resolve_batch_specs(axes, sds, MESH, LM_RULES)
+    used = [a for a in specs["ckv"] if a is not None]
+    flat = []
+    for a in used:
+        flat.extend(a if isinstance(a, tuple) else (a,))
+    assert len(flat) == len(set(flat))
+
+
+def test_recsys_table_rows():
+    spec = _resolve_one(("table_rows", "embed"), (39_000_000, 10), MESH,
+                        RECSYS_RULES, fsdp=False)
+    assert spec[0] == "model"
+
+
+def test_resolve_param_specs_tree():
+    axes = {"a": ("embed", "mlp"), "b": None,
+            "nested": {"c": ("vocab", "embed")}}
+    shapes = {"a": SDS((4096, 12800), np.float32),
+              "b": SDS((7,), np.float32),
+              "nested": {"c": SDS((152064, 8192), np.float32)}}
+    specs = resolve_param_specs(axes, shapes, MESH, LM_RULES, fsdp=False)
+    assert specs["a"][1] == "model"
+    assert specs["nested"]["c"][0] == "model"
+    assert all(x is None for x in specs["b"])
