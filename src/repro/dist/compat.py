@@ -1,0 +1,53 @@
+"""JAX version compatibility shims (installed at ``repro.dist`` import).
+
+The container pins jax 0.4.37; callers and tests are written against two
+newer spellings:
+
+  * ``AbstractMesh(axis_sizes, axis_names)`` — 0.4.37 only accepts the
+    older ``AbstractMesh(shape_tuple)`` form with (name, size) pairs. We
+    wrap ``__init__`` to accept both.
+  * ``jax.set_mesh(mesh)`` — absent in 0.4.37. ``use_mesh`` (in
+    act_sharding) is the supported spelling; it enters the plain ``Mesh``
+    context manager, which is what activation-sharding helpers read.
+
+Both shims are idempotent and purely additive: old-style calls behave
+exactly as before.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import AbstractMesh
+
+
+def _is_sizes_names_call(shape_tuple, axis_types) -> bool:
+    """True for the new-style AbstractMesh(axis_sizes, axis_names) call."""
+    if not isinstance(shape_tuple, (tuple, list)) or not shape_tuple:
+        return False
+    if not all(isinstance(s, (int, np.integer)) for s in shape_tuple):
+        return False
+    return (isinstance(axis_types, (tuple, list)) and len(axis_types) ==
+            len(shape_tuple) and all(isinstance(a, str) for a in axis_types))
+
+
+def _install_abstract_mesh_shim():
+    if getattr(AbstractMesh, "_repro_compat", False):
+        return
+    try:  # newer jax accepts (axis_sizes, axis_names) natively — no shim
+        AbstractMesh((1,), ("probe",))
+        return
+    except Exception:
+        pass
+    orig_init = AbstractMesh.__init__
+
+    def init(self, shape_tuple, axis_types=None, **kwargs):
+        if _is_sizes_names_call(shape_tuple, axis_types):
+            shape_tuple = tuple(zip(axis_types,
+                                    (int(s) for s in shape_tuple)))
+            axis_types = None
+        orig_init(self, tuple(shape_tuple), axis_types, **kwargs)
+
+    AbstractMesh.__init__ = init
+    AbstractMesh._repro_compat = True
+
+
+_install_abstract_mesh_shim()

@@ -25,6 +25,7 @@ import jax
 import numpy as np
 
 from repro.configs import REGISTRY, get_arch
+from repro.dist.act_sharding import use_mesh
 from repro.launch.cells import build_cell
 from repro.launch.mesh import make_production_mesh
 from repro.launch import roofline as rl
@@ -73,7 +74,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     t0 = time.monotonic()
     cell = build_cell(arch_name, shape_name, mesh, fsdp=fsdp,
                       serve_fsdp=serve_fsdp)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                          out_shardings=cell.out_shardings)
         lowered = jitted.lower(*cell.args)

@@ -87,7 +87,10 @@ def main():
     policy = FaultPolicy(checkpoint_every=args.ckpt_every)
     state, metrics = train_loop(step, state, batch_at, args.steps,
                                 ckpt_dir=args.ckpt_dir, policy=policy)
-    print(f"final loss: {float(metrics['loss']):.4f}")
+    if "loss" in metrics:
+        print(f"final loss: {float(metrics['loss']):.4f}")
+    else:
+        print(f"no steps to run (state at step {int(state['step'])})")
 
 
 if __name__ == "__main__":

@@ -29,8 +29,10 @@ def train_loop(step_fn: Callable, init_state: dict, batch_at: Callable,
     ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
     state = init_state
     start = 0
+    resumed_at = None
     if ckpt is not None and ckpt.latest_step() is not None:
         state, start = ckpt.restore(init_state, shardings=shardings)
+        resumed_at = start
         log.info("resumed from step %d", start)
     runner = StepRunner(step_fn, ckpt, policy)
 
@@ -44,6 +46,10 @@ def train_loop(step_fn: Callable, init_state: dict, batch_at: Callable,
             log.info("step %d loss %.4f (%.2fs)", step, loss,
                      time.monotonic() - t0)
         runner.maybe_checkpoint(state, step + 1)
-    if ckpt is not None:
+    # final save — unless the cadence just wrote this step, or the run was
+    # a no-op resume of an already-completed checkpoint (a fresh 0-step run
+    # still snapshots the init state)
+    if ckpt is not None and runner.last_saved != num_steps \
+            and resumed_at != num_steps:
         ckpt.save(state, num_steps)
     return state, metrics

@@ -1,0 +1,142 @@
+"""Fault layer: StepRunner retry semantics, checkpoint cadence, and
+train_loop riding through transient failures + auto-resume."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.dist.fault import FaultPolicy, StepRunner, TransientError
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.train import TrainState, make_train_step, train_loop
+
+
+class FlakyStep:
+    """step_fn that raises ``exc`` on the first ``n_failures`` calls."""
+
+    def __init__(self, n_failures, exc=TransientError("preempted")):
+        self.n_failures = n_failures
+        self.exc = exc
+        self.calls = 0
+
+    def __call__(self, state, batch):
+        self.calls += 1
+        if self.calls <= self.n_failures:
+            raise self.exc
+        return {**state, "step": state["step"] + 1}, {"loss": 0.0}
+
+
+def test_retries_transient_then_succeeds():
+    flaky = FlakyStep(2)
+    runner = StepRunner(flaky, policy=FaultPolicy(max_retries=3,
+                                                  retry_wait_s=0.0))
+    state, _ = runner.run({"step": 0}, {}, step=0)
+    assert state["step"] == 1
+    assert flaky.calls == 3
+    assert runner.retries_total == 2
+
+
+def test_retries_exhausted_reraises():
+    flaky = FlakyStep(5)
+    runner = StepRunner(flaky, policy=FaultPolicy(max_retries=2,
+                                                  retry_wait_s=0.0))
+    with pytest.raises(TransientError):
+        runner.run({"step": 0}, {}, step=0)
+    assert flaky.calls == 3  # 1 try + 2 retries
+
+
+def test_non_transient_fails_fast():
+    flaky = FlakyStep(1, exc=ValueError("NaN loss"))
+    runner = StepRunner(flaky, policy=FaultPolicy(max_retries=3))
+    with pytest.raises(ValueError):
+        runner.run({"step": 0}, {}, step=0)
+    assert flaky.calls == 1  # no retry for a model bug
+
+
+def test_marker_classification():
+    policy = FaultPolicy()
+    assert policy.is_transient(RuntimeError("RESOURCE_EXHAUSTED: oom"))
+    assert policy.is_transient(RuntimeError("worker preempted"))
+    assert not policy.is_transient(ValueError("shape mismatch"))
+
+
+def test_checkpoint_cadence(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep_last=10)
+    runner = StepRunner(lambda s, b: (s, {}), ckpt,
+                        FaultPolicy(checkpoint_every=2))
+    saved = [step for step in range(1, 7)
+             if runner.maybe_checkpoint({"w": jnp.zeros(())}, step)]
+    assert saved == [2, 4, 6]
+    assert ckpt.all_steps() == [2, 4, 6]
+    # idempotent per step: a second call at the same step doesn't re-save
+    assert not runner.maybe_checkpoint({"w": jnp.zeros(())}, 6)
+
+
+def test_cadence_disabled():
+    runner = StepRunner(lambda s, b: (s, {}), ckpt=None,
+                        policy=FaultPolicy(checkpoint_every=0))
+    assert not runner.maybe_checkpoint({}, 100)
+
+
+def _small_lm():
+    cfg = tfm.TransformerConfig(
+        "t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+        vocab=50, d_head=8, dtype=jnp.float32, q_block=8, kv_block=8)
+    p = tfm.init(jax.random.PRNGKey(0), cfg)
+    opt = adamw(1e-3)
+    return cfg, opt, TrainState.create(p, opt).tree()
+
+
+def _batch_at(i):
+    r = np.random.default_rng(i)
+    t = r.integers(0, 50, (2, 8)).astype(np.int32)
+    return {"tokens": jnp.asarray(t), "targets": jnp.asarray(t)}
+
+
+def test_train_loop_rides_through_transient_failure(tmp_path):
+    cfg, opt, state = _small_lm()
+    real_step = jax.jit(make_train_step(
+        lambda p, b: tfm.loss_fn(p, b, cfg), opt))
+    calls = {"n": 0}
+
+    def step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 3:  # one preemption mid-run
+            raise TransientError("slice restart")
+        return real_step(state, batch)
+
+    policy = FaultPolicy(max_retries=2, retry_wait_s=0.0,
+                         checkpoint_every=2)
+    s, _ = train_loop(step, state, _batch_at, 5, ckpt_dir=str(tmp_path),
+                      policy=policy)
+    assert int(s["step"]) == 5
+    assert calls["n"] == 6  # 5 successful + 1 retried
+    ck = CheckpointManager(str(tmp_path))
+    assert ck.all_steps() == [2, 4, 5]  # cadence saves + final save
+
+
+def test_train_loop_resumes_from_cadence_checkpoint(tmp_path):
+    """Crash mid-run after a cadence save -> rerun resumes from it."""
+    cfg, opt, state = _small_lm()
+    real_step = jax.jit(make_train_step(
+        lambda p, b: tfm.loss_fn(p, b, cfg), opt))
+    calls = {"n": 0}
+
+    def crashy(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 4:
+            raise RuntimeError("hard fault")  # non-transient: crashes
+        return real_step(state, batch)
+
+    policy = FaultPolicy(max_retries=1, retry_wait_s=0.0,
+                         checkpoint_every=2)
+    with pytest.raises(RuntimeError):
+        train_loop(crashy, state, _batch_at, 8, ckpt_dir=str(tmp_path),
+                   policy=policy)
+    ck = CheckpointManager(str(tmp_path))
+    assert ck.latest_step() == 2  # saved before the crash at step 3
+
+    s, _ = train_loop(real_step, state, _batch_at, 8,
+                      ckpt_dir=str(tmp_path), policy=policy)
+    assert int(s["step"]) == 8

@@ -22,6 +22,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.dist.act_sharding import use_mesh
 from repro.launch.hlo_analysis import analyze
 
 mesh = jax.make_mesh((4, 4), ("data", "model"))
@@ -30,7 +31,7 @@ def g(x, w):
         return jnp.tanh((c @ w) @ w.T), None
     y, _ = jax.lax.scan(body, x, None, length=7)
     return y
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     xs = jax.ShapeDtypeStruct((64, 256), jnp.float32)
     ws = jax.ShapeDtypeStruct((256, 512), jnp.float32)
     comp = jax.jit(g, in_shardings=(NamedSharding(mesh, P("data", "model")),
