@@ -1,42 +1,162 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one module per paper table/figure, plus the
+cross-backend suite that tracks the perf trajectory across PRs.
 
-``PYTHONPATH=src python -m benchmarks.run [--only tableN]``
+``PYTHONPATH=src python -m benchmarks.run [--only tableN] [--smoke]``
+
 prints ``name,us_per_call,derived`` CSV rows (paper protocol: 7 runs,
-trimmed mean).
+trimmed mean) and writes ``BENCH_results.json`` — machine-readable
+per-query × per-backend wall times plus the backend's kernel-dispatch
+counters, so regressions in *where* intersections execute are visible,
+not just regressions in time.
+
+``--smoke`` runs only the backend suite on tiny graphs (one repetition),
+for CI's bench-smoke lane. ``--only`` restricts the run to the matching
+table/figure module and skips the backend suite (unless the filter
+mentions "backend").
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
+import numpy as np
 
+
+# ----------------------------------------------------- backend suite
+def _result_digest(res):
+    if not res.vars:
+        return float(np.asarray(res.scalar()))
+    ann = res.annotation
+    if ann is None:
+        return int(res.num_rows)
+    return float(np.asarray(ann, dtype=np.float64).sum())
+
+
+def run_backend_suite(smoke: bool) -> list:
+    """Every paper query on every backend: wall time + dispatch counters.
+
+    Also asserts cross-backend result parity (the differential-testing
+    invariant of the backend layer) — a mismatch is reported in the row
+    rather than silently timed.
+    """
+    from repro.core.engine import Engine
+    from repro.core.workload import ALIASES, paper_query_set
+    from repro.data import powerlaw_graph
+
+    n, deg, reps = (150, 6, 1) if smoke else (2000, 12, 3)
+    g = powerlaw_graph(n, deg, 2.0, seed=0)
+    src = np.repeat(np.arange(g.n), g.degrees)
+    hub = int(np.argmax(g.degrees))
+
+    out = []
+    digests = {}
+    for backend in ("numpy", "device"):
+        eng = Engine(backend=backend)
+        eng.load_edges("Edge", src, g.neighbors)
+        for al in ALIASES:
+            eng.alias(al, "Edge")
+        for qname, q in paper_query_set(source=hub):
+            walls = []
+            res = None
+            dispatch = {}
+            for _ in range(reps):
+                before = dict(eng.backend.stats)
+                t0 = time.perf_counter()
+                res = eng.query(q)
+                walls.append(time.perf_counter() - t0)
+                # last rep's delta: per-execution counts, comparable
+                # between --smoke (1 rep) and full (3 reps) artifacts
+                dispatch = {k: v - before.get(k, 0)
+                            for k, v in eng.backend.stats.items()
+                            if v != before.get(k, 0)}
+            digest = _result_digest(res)
+            digests.setdefault(qname, digest)
+            out.append({
+                "query": qname,
+                "backend": backend,
+                "wall_s": min(walls),
+                "result": digest,
+                "parity": bool(np.isclose(digest, digests[qname],
+                                          rtol=1e-5, atol=1e-6)),
+                "dispatch": dispatch,
+            })
+    return out
+
+
+# ------------------------------------------------------------- driver
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on module name")
+    ap.add_argument("--smoke", action="store_true",
+                    help="backend suite only, tiny graphs, 1 rep (CI lane)")
+    ap.add_argument("--json", default="BENCH_results.json",
+                    help="output path for the machine-readable results")
     args = ap.parse_args()
 
-    from benchmarks import (appc_orderings, fig4_intersect_micro,
-                            table4_layout_oracle, table5_triangle,
-                            table6_pagerank, table7_sssp, table8_ablations)
-    modules = [table5_triangle, table6_pagerank, table7_sssp,
-               table8_ablations, table4_layout_oracle,
-               fig4_intersect_micro, appc_orderings]
+    module_rows = []
+    if not args.smoke:
+        from benchmarks import (appc_orderings, fig4_intersect_micro,
+                                table4_layout_oracle, table5_triangle,
+                                table6_pagerank, table7_sssp,
+                                table8_ablations)
+        modules = [table5_triangle, table6_pagerank, table7_sssp,
+                   table8_ablations, table4_layout_oracle,
+                   fig4_intersect_micro, appc_orderings]
 
-    print("name,us_per_call,derived")
-    for mod in modules:
-        name = mod.__name__.split(".")[-1]
-        if args.only and args.only not in name:
-            continue
-        t0 = time.monotonic()
-        try:
-            for r in mod.run():
-                print(r)
-                sys.stdout.flush()
-        except Exception as e:  # report and continue
-            print(f"{name},ERROR,{e!r}")
-        print(f"# {name} finished in {time.monotonic() - t0:.1f}s")
+        print("name,us_per_call,derived")
+        for mod in modules:
+            name = mod.__name__.split(".")[-1]
+            if args.only and args.only not in name:
+                continue
+            t0 = time.monotonic()
+            try:
+                for r in mod.run():
+                    print(r)
+                    module_rows.append(r)
+                    sys.stdout.flush()
+            except Exception as e:  # report and continue
+                print(f"{name},ERROR,{e!r}")
+                module_rows.append(f"{name},ERROR,{e!r}")
+            print(f"# {name} finished in {time.monotonic() - t0:.1f}s")
+
+    if args.only and not args.smoke and "backend" not in args.only:
+        # a filtered single-module run: skip the cross-backend suite
+        payload = {"meta": {"smoke": False, "argv": sys.argv[1:],
+                            "unix_time": time.time()},
+                   "backend_suite": [], "module_rows": module_rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json} (backend suite skipped: --only)")
+        return
+
+    suite = run_backend_suite(args.smoke)
+    print("query,backend,wall_ms,parity,top_dispatch")
+    for row_ in suite:
+        top = sorted((k for k in row_["dispatch"]
+                      if k.startswith("intersect.")),
+                     key=lambda k: -row_["dispatch"][k])
+        print(f"{row_['query']},{row_['backend']},"
+              f"{row_['wall_s'] * 1e3:.1f},{row_['parity']},"
+              f"{top[0] if top else '-'}")
+
+    payload = {
+        "meta": {"smoke": bool(args.smoke),
+                 "argv": sys.argv[1:],
+                 "unix_time": time.time()},
+        "backend_suite": suite,
+        "module_rows": module_rows,
+    }
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {args.json}")
+
+    bad = [r for r in suite if not r["parity"]]
+    if bad:
+        print(f"# PARITY FAILURES: {[r['query'] for r in bad]}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -6,8 +6,16 @@ optimization), then serves a batch of pattern + analytics queries and
 reports per-query latency and the layout optimizer's decisions.
 
     PYTHONPATH=src python examples/graph_analytics.py [--nodes 5000]
+
+Pass ``--backend device`` (or set ``REPRO_ENGINE_BACKEND=device``) to run
+the whole query batch on the device-resident set store: trie levels are
+uploaded once, each attribute extension is a single fused device call,
+and the terminal-fold intersections dispatch to the layout-cohort Pallas
+kernels. The kernel-dispatch summary printed at the end shows which
+kernel handled each intersection.
 """
 import argparse
+import os
 import time
 
 import numpy as np
@@ -25,7 +33,12 @@ def main():
     ap.add_argument("--nodes", type=int, default=3000)
     ap.add_argument("--mean-deg", type=float, default=12)
     ap.add_argument("--exponent", type=float, default=1.9)
+    ap.add_argument("--backend",
+                    default=os.environ.get("REPRO_ENGINE_BACKEND", "numpy"),
+                    choices=("numpy", "device"),
+                    help="execution backend for the query engine")
     args = ap.parse_args()
+    print(f"== backend: {args.backend} ==")
 
     print("== build + preprocess ==")
     g = powerlaw_graph(args.nodes, args.mean_deg, args.exponent, seed=0)
@@ -38,11 +51,11 @@ def main():
     print("layout optimizer:", store.stats())
 
     print("\n== serve pattern queries (WCOJ engine) ==")
-    eng = Engine()
+    eng = Engine(backend=args.backend)
     src = np.repeat(np.arange(g.n), g.degrees)
     eng.load_edges("Edge", src, g.neighbors)
     psrc = np.repeat(np.arange(pruned.n), pruned.degrees)
-    eng_p = Engine()
+    eng_p = Engine(backend=args.backend)
     eng_p.load_edges("Edge", psrc, pruned.neighbors)
     for e in (eng, eng_p):
         for a in ("R", "S", "T", "U", "X", "Y", "R2", "S2", "T2"):
@@ -75,6 +88,14 @@ def main():
         dt = (time.perf_counter() - t0) * 1e3
         val = (int(res.scalar()) if not res.vars else f"{res.num_rows} rows")
         print(f"  {name:34s} {dt:8.1f} ms   -> {val}")
+
+    print("\n== kernel-dispatch summary (which kernel handled each "
+          "intersection) ==")
+    merged = dict(eng.dispatch_summary())
+    for k, v in eng_p.dispatch_summary().items():
+        merged[k] = merged.get(k, 0) + v
+    for key in sorted(merged):
+        print(f"  {key:28s} {merged[key]}")
 
     print("\n== MXU dense-cohort triangle count (beyond-paper path) ==")
     from repro.kernels.triangle_mm.ops import densify_csr, triangle_count_dense

@@ -47,3 +47,18 @@ eng.alias("S2", "Edge")
 eng.alias("T2", "Edge")
 print(eng.explain("B(;w:long) :- R(x,y),S(y,z),T(x,z),U(x,a),R2(a,b),"
                   "S2(b,c),T2(a,c); w=<<COUNT(*)>>."))
+
+# 6. the device execution backend: trie levels live on device, and the
+# hot-path intersections run through the layout-cohort Pallas kernels.
+# Equivalent: REPRO_ENGINE_BACKEND=device python examples/quickstart.py
+dev = Engine(backend="device")
+dev.load_edges("Edge", src, dst)
+for alias in ("R", "S", "T"):
+    dev.alias(alias, "Edge")
+cnt_dev = dev.query("CountTriangle(;w:long) :- R(x,y),S(y,z),T(x,z); "
+                    "w=<<COUNT(*)>>.")
+print(f"\ntriangle count on the device backend: {int(cnt_dev.scalar())} "
+      f"(matches: {int(cnt_dev.scalar()) == int(cnt.scalar())})")
+print("kernel-dispatch summary:")
+for key, val in sorted(dev.dispatch_summary().items()):
+    print(f"  {key:28s} {val}")

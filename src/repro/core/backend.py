@@ -1,0 +1,257 @@
+"""Execution backends: where sets live and who intersects them.
+
+EmptyHeaded's algorithm layer (Generic-Join over GHD bags, ``core.gj``)
+is decoupled from the data-placement/intersection layer following the
+GraphIt algorithm/backend split (Zhang et al. 2018):
+
+  * :class:`NumpyBackend` — the seed behaviour: trie levels stay host
+    numpy, each probe atom's lockstep binary search is a separate jitted
+    call with its own host round-trip. Kept as the differential-testing
+    oracle.
+  * :class:`DeviceBackend` — trie levels are uploaded to device once
+    (cached on the :class:`~repro.core.trie.TrieLevel`, so multi-rule and
+    seminaive programs reuse the upload across iterations), every
+    attribute extension runs all probe atoms in ONE fused jitted call
+    with at most one host sync, and terminal-fold intersections are
+    partitioned into bitset/uint cohorts via the Algorithm-3
+    :class:`~repro.core.layouts.LayoutDecision` and dispatched to the
+    Pallas kernels (uint×uint membership test, bitset×bitset
+    AND+popcount, uint×bitset probe).
+
+Backend selection: ``Engine(backend=...)`` accepts a backend instance or
+the names ``"numpy"`` / ``"device"``; when unset, the
+``REPRO_ENGINE_BACKEND`` environment variable decides (default numpy).
+
+Every backend carries ``stats``, a flat counter recording which kernel
+handled each intersection (``intersect.*`` keys count pairs) and the
+host-sync discipline of the extension loop (``extend.calls`` vs
+``extend.host_syncs``).
+"""
+from __future__ import annotations
+
+import collections
+import os
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import intersect as I
+from repro.core.layouts import engine_store_for
+from repro.core.semiring import Semiring
+from repro.kernels.bitset_intersect.ops import as_word_kernel
+from repro.kernels.uint_intersect.ops import intersect_count_csr_batched
+
+# Pairs whose larger set exceeds this stay on the lockstep binary search
+# (the SIMDGalloping analogue); shorter pairs take the membership-test
+# kernel (the SIMDShuffling analogue) — Algorithm 2's regime split.
+UINT_KERNEL_MAX_LEN = 256
+
+
+class ExecBackend:
+    """Protocol for the Generic-Join execution backend.
+
+    ``extend(infos, F)`` receives the per-atom candidate descriptors of
+    one attribute extension — ``infos`` is a list of
+    ``(atom, values, lo, hi, mass)`` tuples sorted by total candidate
+    mass (the min-property seed first) — and returns
+    ``(row_id, vals, pos)`` exactly like the seed-expand-probe loop:
+    ``pos`` maps ``id(atom)`` to absolute positions into that atom's
+    current trie level.
+
+    ``pair_count(trie, u, v)`` is the binary terminal-fold fast path:
+    layout-routed ``|N(u_i) ∩ N(v_i)|`` counts, or ``None`` when the
+    store is bypassed (layout mode "off"). ``has_pair_store(trie)`` lets
+    the caller skip the frontier gathers entirely in the bypassed case.
+    """
+
+    name = "abstract"
+
+    def __init__(self):
+        self.stats: collections.Counter = collections.Counter()
+        self._dtype_cache: Dict[str, np.dtype] = {}
+
+    # jnp is resolved once at module import (not per GJ call); the per-
+    # semiring canonical numpy dtype is cached per backend instance.
+    def dtype_of(self, sr: Semiring) -> np.dtype:
+        dt = self._dtype_cache.get(sr.name)
+        if dt is None:
+            dt = np.dtype(jnp.zeros((), sr.dtype).dtype)
+            self._dtype_cache[sr.name] = dt
+        return dt
+
+    def extend(self, infos: Sequence[Tuple], F: int):
+        raise NotImplementedError
+
+    @staticmethod
+    def _expand_seed(lo0: np.ndarray, hi0: np.ndarray, F: int):
+        """Min-property seed expansion shared by both backends: flatten
+        every frontier row's seed segment, returning (row_id, p0) with
+        ``p0`` absolute positions into the seed level's values."""
+        cnt = (hi0 - lo0).astype(np.int64)
+        row_id = np.repeat(np.arange(F, dtype=np.int64), cnt)
+        seg_start = np.repeat(np.concatenate([[0], np.cumsum(cnt)])[:-1], cnt)
+        flat = np.arange(len(row_id), dtype=np.int64)
+        p0 = np.repeat(lo0, cnt) + (flat - seg_start)
+        return row_id, p0
+
+    def _pair_store(self, trie):
+        raise NotImplementedError
+
+    def has_pair_store(self, trie) -> bool:
+        return self._pair_store(trie) is not None
+
+    def pair_count(self, trie, u: np.ndarray, v: np.ndarray):
+        store = self._pair_store(trie)
+        if store is None:
+            return None
+        self.stats["fold.pair_count_calls"] += 1
+        return store.intersect_count(u, v)
+
+    def dispatch_summary(self) -> Dict[str, int]:
+        return dict(self.stats)
+
+
+class NumpyBackend(ExecBackend):
+    """Seed behaviour: host-side expansion, one search (and one host
+    round-trip) per probe atom, layout store only on the binary terminal
+    fold with the plain-jnp word kernel."""
+
+    name = "numpy"
+
+    def extend(self, infos, F: int):
+        a0, v0, lo0, hi0, _ = infos[0]
+        row_id, p0 = self._expand_seed(lo0, hi0, F)
+        vals = v0[p0]
+        pos = {id(a0): p0}
+        self.stats["extend.calls"] += 1
+        for a, values, lo, hi, _m in infos[1:]:
+            p, found = I.segment_searchsorted(values, lo[row_id], hi[row_id],
+                                              vals)
+            p = np.asarray(p); found = np.asarray(found)
+            self.stats["extend.host_syncs"] += 1
+            keep = found
+            row_id = row_id[keep]
+            vals = vals[keep]
+            for k in pos:
+                pos[k] = pos[k][keep]
+            pos[id(a)] = p[keep]
+        return row_id, vals, pos
+
+    def _pair_store(self, trie):
+        return engine_store_for(trie, counter=self.stats, cache_tag="host")
+
+
+class DeviceBackend(ExecBackend):
+    """Device-resident set store: upload trie levels once, fuse every
+    extension's probes into one jitted call (one host sync per attribute
+    extension), and route terminal-fold intersections to the
+    layout-cohort Pallas kernels."""
+
+    name = "device"
+
+    def __init__(self, interpret: Optional[bool] = None,
+                 uint_max_len: int = UINT_KERNEL_MAX_LEN):
+        super().__init__()
+        self._interpret = interpret
+        self._word_kernel = as_word_kernel(interpret=interpret)
+        self._uint_max_len = uint_max_len
+
+        def uint_kernel(offsets, neighbors, u, v):
+            return intersect_count_csr_batched(
+                offsets, neighbors, u, v, interpret=interpret,
+                max_len=uint_max_len)
+
+        self._uint_kernel = uint_kernel
+
+    # ------------------------------------------------------------- uploads
+    def _dev_values(self, atom) -> jnp.ndarray:
+        lv = atom.trie.levels[atom.depth]
+        return lv.device_values(jnp.asarray, on_upload=self._count_upload)
+
+    def _count_upload(self):
+        self.stats["upload.levels"] += 1
+
+    # ------------------------------------------------------------- extend
+    def extend(self, infos, F: int):
+        self.stats["extend.calls"] += 1
+        a0, v0, lo0, hi0, _ = infos[0]
+        row_id, p0 = self._expand_seed(lo0, hi0, F)
+        if len(row_id) == 0:
+            z = np.zeros(0, np.int64)
+            return z, np.zeros(0, np.int32), {id(a): z for a, *_ in infos}
+        if len(infos) == 1:
+            # unary extension: no probes, so the host copy already has the
+            # answer — zero device traffic
+            return row_id, v0[p0], {id(a0): p0}
+        vals_dev = self._dev_values(a0)[p0]
+
+        values_t = tuple(self._dev_values(a) for a, *_ in infos[1:])
+        lo_t = tuple(info[2][row_id] for info in infos[1:])
+        hi_t = tuple(info[3][row_id] for info in infos[1:])
+        pos_t, found = _fused_probe(values_t, lo_t, hi_t, vals_dev)
+        # the ONLY host round-trip of this extension: every probe atom's
+        # positions + the combined membership mask come back together.
+        pos_h, found_h, vals_h = jax.device_get((pos_t, found, vals_dev))
+        self.stats["extend.host_syncs"] += 1
+        keep = np.asarray(found_h)
+        out_row = row_id[keep]
+        out_vals = np.asarray(vals_h)[keep]
+        pos = {id(a0): p0[keep]}
+        for (a, *_), p in zip(infos[1:], pos_h):
+            pos[id(a)] = np.asarray(p)[keep]
+        return out_row, out_vals, pos
+
+    # ------------------------------------------------------ terminal folds
+    def _pair_store(self, trie):
+        return engine_store_for(trie, word_kernel=self._word_kernel,
+                                 uint_kernel=self._uint_kernel,
+                                 uint_max_len=self._uint_max_len,
+                                 counter=self.stats, cache_tag="device")
+
+
+@jax.jit
+def _fused_probe(values_t, lo_t, hi_t, queries):
+    """Probe ``queries`` into every atom's candidate segment in one jitted
+    program. Each atom's search is independent of the others' outcomes
+    (positions don't depend on which rows survive), so computing all
+    searches then AND-ing the membership masks is equivalent to the
+    sequential filter — but costs one device round-trip instead of one
+    per atom."""
+    poss = []
+    found_all = None
+    for values, lo, hi in zip(values_t, lo_t, hi_t):
+        pos, found = I.segment_searchsorted(values, lo, hi, queries)
+        poss.append(pos)
+        found_all = found if found_all is None else (found_all & found)
+    return tuple(poss), found_all
+
+
+# -------------------------------------------------------------- selection
+_BY_NAME = {"numpy": NumpyBackend, "host": NumpyBackend,
+            "device": DeviceBackend}
+_DEFAULT: Optional[ExecBackend] = None
+
+
+def make_backend(spec=None) -> ExecBackend:
+    """Resolve ``spec`` (instance | name | None) to a fresh backend.
+    ``None`` defers to ``REPRO_ENGINE_BACKEND`` (default "numpy")."""
+    if isinstance(spec, ExecBackend):
+        return spec
+    if spec is None:
+        spec = os.environ.get("REPRO_ENGINE_BACKEND", "numpy")
+    spec = str(spec).lower()
+    if spec not in _BY_NAME:
+        raise ValueError(f"unknown backend {spec!r}; "
+                         f"expected one of {sorted(_BY_NAME)}")
+    return _BY_NAME[spec]()
+
+
+def default_backend() -> ExecBackend:
+    """Process-wide backend for GenericJoin instances constructed without
+    an explicit backend (honours REPRO_ENGINE_BACKEND at first use)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = make_backend(None)
+    return _DEFAULT

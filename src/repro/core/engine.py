@@ -14,6 +14,17 @@ recursion (fixed iterations / float tolerance — PageRank) or **seminaive**
 recursion, selected automatically "if the aggregation is monotonically
 increasing or decreasing with a MIN or MAX operator" (paper Section 3.3 —
 SSSP), in which case only the delta relation is re-joined each round.
+
+**Backend selection**: the execution engine runs on a pluggable backend
+(``core.backend``). ``Engine(backend="numpy")`` is the host-side oracle;
+``Engine(backend="device")`` keeps trie levels device-resident, fuses
+each attribute extension into one device call, and dispatches
+terminal-fold intersections to the layout-cohort Pallas kernels. With no
+argument the ``REPRO_ENGINE_BACKEND`` environment variable decides
+(default numpy). One backend instance lives per Engine, so multi-rule and
+recursive programs reuse its device-resident uploads across rules and
+iterations; ``Engine.dispatch_summary()`` reports which kernel handled
+each intersection.
 """
 from __future__ import annotations
 
@@ -23,6 +34,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import codegen as codegen_mod
+from repro.core.backend import ExecBackend, make_backend
 from repro.core.compile import QueryPlan, compile_rule
 from repro.core.datalog import AggRef, Rule, eval_expr, parse
 from repro.core.executor import Catalog, Executor
@@ -63,10 +75,13 @@ class QueryResult:
 class Engine:
     """Public API: load relations, run datalog programs."""
 
-    def __init__(self, use_ghd: bool = True, use_codegen: bool = True):
+    def __init__(self, use_ghd: bool = True, use_codegen: bool = True,
+                 backend=None):
         self.catalog = Catalog()
         self.use_ghd = use_ghd
         self.use_codegen = use_codegen
+        # backend: ExecBackend | "numpy" | "device" | None (env-resolved)
+        self.backend: ExecBackend = make_backend(backend)
         self.dictionary: Dict[object, int] = {}
         self.last_plan: Optional[QueryPlan] = None
         self.last_source: Optional[str] = None
@@ -129,6 +144,12 @@ class Engine:
     def generated_source(self) -> Optional[str]:
         return self.last_source
 
+    def dispatch_summary(self) -> Dict[str, int]:
+        """Instrumentation counters: which kernel handled each intersection
+        (``intersect.*`` count pairs), extension-loop host-sync discipline
+        (``extend.calls`` vs ``extend.host_syncs``), device uploads."""
+        return self.backend.dispatch_summary()
+
     # ------------------------------------------------------------ internals
     def _compile(self, rule: Rule) -> QueryPlan:
         key = (repr(rule), self.use_ghd)
@@ -145,8 +166,8 @@ class Engine:
         if self.use_codegen:
             fn, src = codegen_mod.emit(plan)
             self.last_source = src
-            return fn(self.catalog, self.encode)
-        ex = Executor(self.catalog, self.encode)
+            return fn(self.catalog, self.encode, self.backend)
+        ex = Executor(self.catalog, self.encode, backend=self.backend)
         return ex.run(plan)
 
     def _eval_rule(self, rule: Rule, materialize: bool) -> QueryResult:

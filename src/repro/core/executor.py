@@ -85,9 +85,11 @@ class Catalog:
 
 class Executor:
     def __init__(self, catalog: Catalog,
-                 encode: Optional[Callable[[object], int]] = None):
+                 encode: Optional[Callable[[object], int]] = None,
+                 backend=None):
         self.catalog = catalog
         self.encode = encode or (lambda v: int(v))
+        self.backend = backend  # None -> GenericJoin resolves the default
         self.stats = ExecStats()
 
     # ------------------------------------------------------------------ api
@@ -147,7 +149,8 @@ class Executor:
 
         semiring = plan.semiring if aggregate else None
         gj = GenericJoin(gj_atoms, bp.var_order, bp.output_vars,
-                         semiring=semiring, selections=selections)
+                         semiring=semiring, selections=selections,
+                         backend=self.backend)
         res = gj.run()
         self.stats.intersect_rows += res.num_rows
         return res
@@ -179,7 +182,8 @@ class Executor:
             atoms.append((t, res.vars))
         var_order = tuple(v for v in plan.order
                           if any(v in vs for _, vs in atoms))
-        gj = GenericJoin(atoms, var_order, plan.output_vars, semiring=None)
+        gj = GenericJoin(atoms, var_order, plan.output_vars, semiring=None,
+                         backend=self.backend)
         return gj.run()
 
     def _apply_expr(self, plan: QueryPlan, res: GJResult) -> GJResult:

@@ -19,6 +19,15 @@ that never materializes the expansion — e.g. triangle counting folds
 |N(x) ∩ N(y)| per frontier row directly.
 
 Annotations follow Green et al. provenance semirings (`core.semiring`).
+
+Where sets live and who intersects them is the *execution backend*'s
+business (``core.backend``): this module owns the join logic only and
+delegates every attribute extension and terminal-fold intersection to the
+backend — ``NumpyBackend`` reproduces the host-side seed behaviour,
+``DeviceBackend`` keeps trie levels device-resident and routes
+intersections to the layout-cohort Pallas kernels. Construct
+``GenericJoin(..., backend=...)`` to pick one explicitly; the default is
+resolved from ``REPRO_ENGINE_BACKEND``.
 """
 from __future__ import annotations
 
@@ -27,7 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import intersect as I
+from repro.core import backend as backend_mod
 from repro.core.semiring import COUNT, Semiring
 from repro.core.trie import Trie
 
@@ -78,11 +87,6 @@ class GJResult:
         return self.annotation
 
 
-def _dtype_of(sr: Semiring):
-    import jax.numpy as _jnp
-    return np.dtype(_jnp.zeros((), sr.dtype).dtype)
-
-
 class GenericJoin:
     """Vectorized worst-case-optimal join over one GHD bag."""
 
@@ -90,7 +94,8 @@ class GenericJoin:
                  var_order: Sequence[str],
                  output_vars: Sequence[str],
                  semiring: Optional[Semiring] = None,
-                 selections: Optional[Dict[int, Dict[int, int]]] = None):
+                 selections: Optional[Dict[int, Dict[int, int]]] = None,
+                 backend=None):
         """
         atoms: (trie, vars) pairs; trie attr order must equal the global order
           restricted to its vars (callers re-index via Trie.reorder).
@@ -101,7 +106,11 @@ class GenericJoin:
         semiring: fold algebra for projected-away attributes; None = set
           semantics (dedup).
         selections: atom_idx -> {attr_pos: constant} equality selections.
+        backend: ExecBackend carrying out extensions/intersections; None
+          resolves the process default (REPRO_ENGINE_BACKEND).
         """
+        self.backend = (backend if backend is not None
+                        else backend_mod.default_backend())
         self.var_order = tuple(var_order)
         self.output_vars = tuple(output_vars)
         self.semiring = semiring
@@ -213,10 +222,11 @@ class GenericJoin:
                 empty_cols = {k: np.zeros(0, np.int32) for k in self.output_vars}
                 empty_ann = None
                 if sr is not None:
+                    dt = self.backend.dtype_of(sr)
                     if self.output_vars:
-                        empty_ann = np.zeros(0, _dtype_of(sr))
+                        empty_ann = np.zeros(0, dt)
                     else:
-                        empty_ann = np.asarray(sr.zero, dtype=_dtype_of(sr))
+                        empty_ann = np.asarray(sr.zero, dtype=dt)
                 return GJResult(self.output_vars, empty_cols, empty_ann)
 
         # ---------------- project to output vars
@@ -230,31 +240,19 @@ class GenericJoin:
 
     # ------------------------------------------------------------ internals
     def _extend(self, cons: List[BoundAtom], F: int):
-        """Intersect candidates of ``cons`` per frontier row; materialize."""
-        # seed with the relation with the smallest total candidate mass
+        """Intersect candidates of ``cons`` per frontier row; materialize.
+
+        Gathers each atom's per-row candidate bounds, orders by total
+        candidate mass (the min-property seed first) and hands the whole
+        extension to the backend — which expands the seed and probes every
+        other atom (NumpyBackend: one search per atom; DeviceBackend: one
+        fused device call for all atoms)."""
         infos = []
         for a in cons:
             values, lo, hi = a.candidate_bounds(F)
             infos.append((a, values, lo, hi, int((hi - lo).sum())))
         infos.sort(key=lambda t: t[4])
-        a0, v0, lo0, hi0, _ = infos[0]
-        cnt = (hi0 - lo0).astype(np.int64)
-        row_id = np.repeat(np.arange(F, dtype=np.int64), cnt)
-        seg_start = np.repeat(np.concatenate([[0], np.cumsum(cnt)])[:-1], cnt)
-        flat = np.arange(len(row_id), dtype=np.int64)
-        p0 = np.repeat(lo0, cnt) + (flat - seg_start)
-        vals = v0[p0]
-        pos = {id(a0): p0}
-        for a, values, lo, hi, _m in infos[1:]:
-            p, found = I.segment_searchsorted(values, lo[row_id], hi[row_id], vals)
-            p = np.asarray(p); found = np.asarray(found)
-            keep = found
-            row_id = row_id[keep]
-            vals = vals[keep]
-            for k in pos:
-                pos[k] = pos[k][keep]
-            pos[id(a)] = p[keep]
-        return row_id, vals, pos
+        return self.backend.extend(infos, F)
 
     def _terminal_fold(self, cons: List[BoundAtom], F: int):
         """Fold the last attribute without materializing the expansion.
@@ -269,6 +267,7 @@ class GenericJoin:
         """
         sr = self.semiring
         assert sr is not None
+        self.backend.stats["fold.calls"] += 1
         has_ann = any(a.trie.annotation is not None for a in cons)
         if sr is COUNT and not has_ann:
             counts = self._fold_count(cons, F)
@@ -290,18 +289,19 @@ class GenericJoin:
         if len(cons) == 2:
             a, b = cons
             # Binary self-join terminal (the triangle hot path): route
-            # through the set-level layout optimizer — bitset cohort pairs
-            # take the AND+popcount kernel, sparse pairs the lockstep
-            # search (paper Section 4; layout mode via layouts.engine_*).
+            # through the backend's set-level layout store — bitset cohort
+            # pairs take the AND+popcount kernel, sparse pairs the uint
+            # kernel or lockstep search (paper Section 4; layout mode via
+            # layouts.set_engine_layout_mode).
             if (a.trie is b.trie and a.trie.arity == 2
                     and a.depth == 1 and b.depth == 1
-                    and a.cursor is not None and b.cursor is not None):
-                from repro.core.layouts import engine_store_for
-                store = engine_store_for(a.trie)
-                if store is not None:
-                    u = a.trie.levels[0].values[a.cursor].astype(np.int64)
-                    v = b.trie.levels[0].values[b.cursor].astype(np.int64)
-                    return store.intersect_count(u, v)
+                    and a.cursor is not None and b.cursor is not None
+                    and self.backend.has_pair_store(a.trie)):
+                u = a.trie.levels[0].values[a.cursor].astype(np.int64)
+                v = b.trie.levels[0].values[b.cursor].astype(np.int64)
+                out = self.backend.pair_count(a.trie, u, v)
+                if out is not None:
+                    return out
         # chain: materialize smallest two's intersection per row, count others
         row_id, vals, _pos = self._extend(cons, F)
         return np.bincount(row_id, minlength=F).astype(np.int64)

@@ -100,22 +100,38 @@ def set_engine_layout_mode(mode: str):
     _ENGINE_LAYOUT_MODE = mode
 
 
-def engine_store_for(trie) -> Optional["HybridSetStore"]:
+def engine_store_for(trie, *, word_kernel: Optional[Callable] = None,
+                     uint_kernel: Optional[Callable] = None,
+                     uint_max_len: int = 256,
+                     counter=None,
+                     cache_tag: str = "host") -> Optional["HybridSetStore"]:
     """Per-trie cached HybridSetStore for the engine's binary terminal
     folds (built lazily on first use; index build time is excluded from
-    query timing, as in the paper)."""
+    query timing, as in the paper).
+
+    Stores are cached per (layout mode, cache_tag) so the numpy and
+    device backends — which inject different intersection kernels — each
+    keep their own resident index on the same trie. ``counter`` (a
+    Counter-like mapping) is rebound on every call so dispatch
+    instrumentation always lands on the calling backend.
+    """
     if _ENGINE_LAYOUT_MODE == "off":
         return None
-    cached = getattr(trie, "_hybrid_store", None)
-    if cached is not None and cached[0] == _ENGINE_LAYOUT_MODE:
-        return cached[1]
-    csr = CSRGraph.from_trie(trie)
-    if _ENGINE_LAYOUT_MODE == "uint":
-        store = HybridSetStore.build(
-            csr, decision=decide_relation_level(csr, "uint"))
-    else:
-        store = HybridSetStore.build(csr)
-    trie._hybrid_store = (_ENGINE_LAYOUT_MODE, store)
+    cache = getattr(trie, "_hybrid_stores", None)
+    if cache is None:
+        cache = trie._hybrid_stores = {}
+    key = (_ENGINE_LAYOUT_MODE, cache_tag)
+    store = cache.get(key)
+    if store is None:
+        csr = CSRGraph.from_trie(trie)
+        decision = (decide_relation_level(csr, "uint")
+                    if _ENGINE_LAYOUT_MODE == "uint" else None)
+        store = HybridSetStore.build(csr, decision=decision,
+                                     word_kernel=word_kernel,
+                                     uint_kernel=uint_kernel,
+                                     uint_max_len=uint_max_len)
+        cache[key] = store
+    store.counter = counter
     return store
 
 
@@ -131,18 +147,32 @@ class HybridSetStore:
     bitset: Optional[I.BlockedBitset]
     # injected word-AND-popcount (the Pallas kernel), None -> pure jnp
     word_kernel: Optional[Callable] = None
+    # injected batched uint∩uint kernel ((offsets, neighbors, u, v) ->
+    # counts) for short similar-cardinality pairs; None -> lockstep search
+    uint_kernel: Optional[Callable] = None
+    # pairs whose larger set exceeds this stay on the search path
+    uint_max_len: int = 256
+    # Counter-like sink recording which kernel handled each pair
+    counter: Optional[object] = None
 
     @staticmethod
     def build(csr: CSRGraph, threshold: float = SIMD_REGISTER_BITS,
               block_bits: int = SIMD_REGISTER_BITS,
               word_kernel: Optional[Callable] = None,
+              uint_kernel: Optional[Callable] = None,
+              uint_max_len: int = 256,
               decision: Optional[LayoutDecision] = None) -> "HybridSetStore":
         d = decision if decision is not None else decide_set_level(csr, threshold)
         bs = None
         if len(d.dense_ids):
             bs = I.build_blocked_bitset(csr.offsets, csr.neighbors,
                                         d.dense_ids, csr.n, block_bits)
-        return HybridSetStore(csr, d, bs, word_kernel)
+        return HybridSetStore(csr, d, bs, word_kernel, uint_kernel,
+                              uint_max_len)
+
+    def _bump(self, key: str, n: int):
+        if self.counter is not None:
+            self.counter[key] += n
 
     def stats(self) -> dict:
         d = self.decision
@@ -168,7 +198,7 @@ class HybridSetStore:
         if len(u) == 0:
             return out
         if self.bitset is None:
-            return I.intersect_count_uint(self.csr.offsets, self.csr.neighbors, u, v)
+            return self._sparse_count(u, v)
         slot = self.bitset.slot_of
         ud = slot[u] >= 0
         vd = slot[v] >= 0
@@ -178,6 +208,8 @@ class HybridSetStore:
             idx = np.flatnonzero(both_d)
             out[idx] = I.bitset_intersect_count(
                 self.bitset, slot[u[idx]], slot[v[idx]], self.word_kernel)
+            self._bump("intersect.bitset_kernel" if self.word_kernel
+                       else "intersect.bitset_jnp", len(idx))
 
         mixed = ud ^ vd
         if mixed.any():
@@ -188,13 +220,36 @@ class HybridSetStore:
             out[idx] = I.uint_bitset_intersect_count(
                 self.csr.offsets, self.csr.neighbors, sparse_side,
                 self.bitset, slot[dense_side])
+            self._bump("intersect.uint_bitset", len(idx))
 
         both_s = ~(ud | vd)
         if both_s.any():
             idx = np.flatnonzero(both_s)
-            out[idx] = I.intersect_count_uint(
-                self.csr.offsets, self.csr.neighbors, u[idx], v[idx])
+            out[idx] = self._sparse_count(u[idx], v[idx])
         return out
+
+    def _sparse_count(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+        """uint∩uint cohort: Algorithm 2's regime split — short
+        similar-cardinality pairs take the membership-test kernel when one
+        is injected, long/skewed pairs the lockstep binary search."""
+        if self.uint_kernel is not None:
+            deg = self.csr.degrees
+            short = np.maximum(deg[u], deg[v]) <= self.uint_max_len
+            out = np.zeros(len(u), dtype=np.int64)
+            if short.any():
+                idx = np.flatnonzero(short)
+                out[idx] = self.uint_kernel(self.csr.offsets,
+                                            self.csr.neighbors, u[idx], v[idx])
+                self._bump("intersect.uint_kernel", len(idx))
+            if not short.all():
+                idx = np.flatnonzero(~short)
+                out[idx] = I.intersect_count_uint(
+                    self.csr.offsets, self.csr.neighbors, u[idx], v[idx])
+                self._bump("intersect.uint_search", len(idx))
+            return out
+        self._bump("intersect.uint_search", len(u))
+        return I.intersect_count_uint(self.csr.offsets, self.csr.neighbors,
+                                      u, v)
 
     def intersect_materialize(self, u: np.ndarray, v: np.ndarray):
         """Materializing intersection (pair_id, value). Used for non-terminal

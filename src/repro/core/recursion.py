@@ -44,7 +44,8 @@ def semiring_spmv(sr: Semiring, n: int, row: jnp.ndarray, col: jnp.ndarray,
 
 # ---------------------------------------------------------------- pagerank
 def pagerank(csr: CSRGraph, iters: int = 5, damping: float = 0.85,
-             spmv_fn: Optional[Callable] = None) -> np.ndarray:
+             spmv_fn: Optional[Callable] = None,
+             backend=None) -> np.ndarray:
     """Paper Table 2 PageRank: naive recursion, fixed iteration count.
 
         N(;w)        :- Edge(x,y); w=<<COUNT(x)>>
@@ -54,7 +55,12 @@ def pagerank(csr: CSRGraph, iters: int = 5, damping: float = 0.85,
 
     The body is a (+,*) join-aggregate = SpMV with InvDeg folded into the
     propagated value. ``spmv_fn`` lets benchmarks inject the Pallas ELL
-    kernel; default is the jitted segment-sum SpMV.
+    kernel; default is the jitted segment-sum SpMV — except when this
+    fixpoint API is handed the device execution backend
+    (``core.backend.DeviceBackend``), in which case the ELL kernel is
+    selected automatically and the whole fixpoint stays on device inside
+    one ``fori_loop``. (The datalog engine's PageRank program evaluates
+    through general naive recursion and does not route here.)
     """
     n = csr.n
     row = jnp.asarray(csr_row_ids(csr))
@@ -64,6 +70,15 @@ def pagerank(csr: CSRGraph, iters: int = 5, damping: float = 0.85,
 
     x = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
     base = (1.0 - damping) / n
+
+    if spmv_fn is None and getattr(backend, "name", None) == "device":
+        from repro.kernels.spmv_ell.ops import csr_to_ell, spmv_ell
+        cols, vals = csr_to_ell(csr.offsets, csr.neighbors)
+        cols_d, vals_d = jnp.asarray(cols), jnp.asarray(vals)
+        backend.stats["spmv.ell_kernel"] += iters
+
+        def spmv_fn(x_scaled):
+            return spmv_ell(cols_d, vals_d, x_scaled)
 
     if spmv_fn is None:
         def spmv_fn(x_scaled):

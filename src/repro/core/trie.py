@@ -39,6 +39,24 @@ class TrieLevel:
     def segment(self, parent_pos: int) -> np.ndarray:
         return self.values[self.offsets[parent_pos]:self.offsets[parent_pos + 1]]
 
+    def device_values(self, to_device, on_upload=None):
+        """Device-resident copy of ``values``, uploaded once and cached.
+
+        ``to_device`` is the backend's upload function (``jnp.asarray``),
+        injected so trie storage itself stays numpy-pure. The cache keys
+        on array identity, so a rebuilt level re-uploads while repeated
+        queries / recursion rounds over the same relation reuse the
+        resident copy. ``on_upload`` (if given) is called exactly when an
+        actual upload happens — the backend's instrumentation hook.
+        """
+        cached = self.__dict__.get("_dev_values")
+        if cached is None or cached[0] is not self.values:
+            cached = (self.values, to_device(self.values))
+            self._dev_values = cached
+            if on_upload is not None:
+                on_upload()
+        return cached[1]
+
 
 @dataclasses.dataclass
 class Trie:

@@ -47,3 +47,19 @@ def as_word_kernel(interpret=None):
         return np.asarray(bitset_and_popcount(words, pos_a, pos_b,
                                               interpret=interpret))
     return fn
+
+
+def bitset_pair_count(bs, a_slots, b_slots, *, interpret=None,
+                      word_kernel=None) -> np.ndarray:
+    """Batched cohort entry point: |S_a ∩ S_b| for slot pairs of one
+    :class:`~repro.core.intersect.BlockedBitset` cohort — block-id
+    intersection (uint machinery) followed by the Pallas AND+popcount
+    kernel over all matched blocks in one launch. Pass a prebuilt
+    ``word_kernel`` (from :func:`as_word_kernel`) to reuse the adapter
+    across calls."""
+    from repro.core.intersect import bitset_intersect_count  # avoid cycle
+    if word_kernel is None:
+        word_kernel = as_word_kernel(interpret)
+    return bitset_intersect_count(bs, np.asarray(a_slots),
+                                  np.asarray(b_slots),
+                                  word_and_popcount=word_kernel)

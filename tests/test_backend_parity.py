@@ -1,0 +1,222 @@
+"""Backend differential testing (the backend-layer invariant): every
+paper query must produce identical results on the NumpyBackend (oracle)
+and the DeviceBackend (device-resident set store + layout-cohort Pallas
+kernels), and the dispatch counters must prove the device backend runs
+its intersections through the kernels from inside the GJ loop with at
+most one host sync per attribute extension."""
+import numpy as np
+import pytest
+
+from conftest import brute_triangle_count, random_undirected_graph
+from repro.core import workload as W
+from repro.core.backend import DeviceBackend, NumpyBackend, make_backend
+from repro.core.engine import Engine
+from repro.core.layouts import set_engine_layout_mode
+
+ALIASES = W.ALIASES
+
+PAPER_QUERIES = {
+    "triangle_count": W.TRIANGLE_COUNT,
+    "triangle_list": W.TRIANGLE_LIST,
+    "4clique": W.FOUR_CLIQUE,
+    "lollipop": W.LOLLIPOP,
+    "barbell": W.BARBELL,
+    "pagerank": W.pagerank_program(iters=6),
+    "sssp": W.sssp_program("{s}"),
+}
+
+
+def make_engine(src, dst, backend, annotation=None):
+    eng = Engine(backend=backend)
+    eng.load_edges("Edge", src, dst, annotation=annotation)
+    for a in ALIASES:
+        eng.alias(a, "Edge")
+    return eng
+
+
+def assert_same_result(r1, r2):
+    assert r1.vars == r2.vars
+    for v in r1.vars:
+        np.testing.assert_array_equal(r1.columns[v], r2.columns[v])
+    if r1.annotation is None:
+        assert r2.annotation is None
+    else:
+        np.testing.assert_allclose(np.asarray(r1.annotation),
+                                   np.asarray(r2.annotation),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# -------------------------------------------------------------- paper queries
+@pytest.mark.parametrize("qname", sorted(PAPER_QUERIES))
+def test_paper_query_parity(qname):
+    src, dst, adj = random_undirected_graph(28, 0.25, 42)
+    q = PAPER_QUERIES[qname].replace("{s}", str(int(src[0])))
+    r1 = make_engine(src, dst, "numpy").query(q)
+    r2 = make_engine(src, dst, "device").query(q)
+    assert_same_result(r1, r2)
+    if qname == "triangle_count":
+        assert int(r1.scalar()) == 6 * brute_triangle_count(adj)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "device"])
+def test_interpreter_vs_codegen_on_backend(backend):
+    """Both execution strategies agree on both backends."""
+    src, dst, _ = random_undirected_graph(20, 0.3, 7)
+    q = PAPER_QUERIES["triangle_count"]
+    res = {}
+    for use_codegen in (True, False):
+        eng = Engine(use_codegen=use_codegen, backend=backend)
+        eng.load_edges("Edge", src, dst)
+        for a in ("R", "S", "T"):
+            eng.alias(a, "Edge")
+        res[use_codegen] = int(eng.query(q).scalar())
+    assert res[True] == res[False]
+
+
+# ----------------------------------------------------------------- edge cases
+@pytest.mark.parametrize("backend", ["numpy", "device"])
+def test_empty_join(backend):
+    # a 6-cycle has edges but no triangles
+    n = 6
+    src = np.array([i for i in range(n)] + [(i + 1) % n for i in range(n)])
+    dst = np.array([(i + 1) % n for i in range(n)] + [i for i in range(n)])
+    eng = make_engine(src, dst, backend)
+    cnt = eng.query(PAPER_QUERIES["triangle_count"])
+    assert int(cnt.scalar()) == 0
+    lst = eng.query(PAPER_QUERIES["triangle_list"])
+    assert lst.num_rows == 0
+
+
+def test_selection_prefix_parity():
+    src, dst, adj = random_undirected_graph(18, 0.3, 5)
+    x0 = int(src[0])
+    r1 = make_engine(src, dst, "numpy").query(f"Nbr(y) :- Edge({x0},y).")
+    r2 = make_engine(src, dst, "device").query(f"Nbr(y) :- Edge({x0},y).")
+    assert_same_result(r1, r2)
+    assert set(r1.columns["y"].tolist()) == set(adj[x0].nonzero()[0].tolist())
+    # empty selection: constant not present in the relation
+    for b in ("numpy", "device"):
+        res = make_engine(src, dst, b).query("Nbr(y) :- Edge(999,y).")
+        assert res.num_rows == 0
+
+
+def test_annotated_semiring_parity():
+    src, dst, _ = random_undirected_graph(16, 0.35, 9)
+    w = (np.arange(len(src)) % 5).astype(np.float32) + 0.25
+    q = "WS(x;s:float) :- Edge(x,y); s=<<SUM(y)>>."
+    r1 = make_engine(src, dst, "numpy", annotation=w).query(q)
+    r2 = make_engine(src, dst, "device", annotation=w).query(q)
+    assert_same_result(r1, r2)
+    # oracle: per-source sum of edge annotations
+    want = {}
+    for (u, _v), wi in zip(zip(src, dst), w):
+        want[int(u)] = want.get(int(u), 0.0) + float(wi)
+    got = r1.as_dict()
+    assert set(got) == set(want)
+    for k in want:
+        assert abs(got[k] - want[k]) < 1e-4
+
+
+# ------------------------------------------------------------- dispatch proof
+def test_device_backend_uses_bitset_kernel_in_gj_loop():
+    """Dense cohorts (Algorithm 3) must reach the Pallas AND+popcount
+    kernel from inside the GJ terminal fold, with at most one host sync
+    per attribute extension."""
+    src, dst, _ = random_undirected_graph(40, 0.3, 3)  # dense -> bitset
+    eng = make_engine(src, dst, "device")
+    eng.query(PAPER_QUERIES["triangle_count"])
+    st = eng.dispatch_summary()
+    assert st.get("intersect.bitset_kernel", 0) > 0, st
+    assert st.get("intersect.bitset_jnp", 0) == 0, st
+    assert st["extend.host_syncs"] <= st["extend.calls"], st
+    assert st["upload.levels"] > 0
+
+
+def test_device_backend_uses_uint_kernel_in_gj_loop():
+    """Relation-level uint mode (the -R ablation) must route the sparse
+    cohort through the Pallas membership-test kernel."""
+    src, dst, _ = random_undirected_graph(40, 0.3, 3)
+    set_engine_layout_mode("uint")
+    try:
+        eng = make_engine(src, dst, "device")
+        eng.query(PAPER_QUERIES["triangle_count"])
+        st = eng.dispatch_summary()
+    finally:
+        set_engine_layout_mode("set")
+    assert st.get("intersect.uint_kernel", 0) > 0, st
+
+
+def test_numpy_backend_never_touches_pallas_kernels():
+    """The oracle keeps the seed behaviour: jnp word kernel, search path."""
+    src, dst, _ = random_undirected_graph(30, 0.3, 4)
+    eng = make_engine(src, dst, "numpy")
+    eng.query(PAPER_QUERIES["triangle_count"])
+    st = eng.dispatch_summary()
+    assert st.get("intersect.bitset_kernel", 0) == 0, st
+    assert st.get("intersect.uint_kernel", 0) == 0, st
+    # one search round-trip per probe atom >= one per extension
+    assert st["extend.host_syncs"] >= st["extend.calls"]
+
+
+def test_device_uploads_cached_across_queries():
+    """Trie levels upload once; the second query reuses resident copies
+    (what makes multi-rule/recursive programs stay on device)."""
+    src, dst, _ = random_undirected_graph(24, 0.3, 8)
+    eng = make_engine(src, dst, "device")
+    eng.query(PAPER_QUERIES["triangle_count"])
+    first = eng.dispatch_summary().get("upload.levels", 0)
+    eng.query(PAPER_QUERIES["triangle_count"])
+    second = eng.dispatch_summary().get("upload.levels", 0)
+    assert first > 0 and second == first
+
+
+def test_bitset_pair_count_entry_point_matches_oracle():
+    """The batched bitset cohort entry point (kernels ops) agrees with
+    the pure-numpy pairwise intersection oracle."""
+    from repro.core import intersect as I
+    from repro.core.layouts import decide_set_level
+    from repro.core.trie import CSRGraph
+    from repro.kernels.bitset_intersect.ops import bitset_pair_count
+
+    src, dst, _ = random_undirected_graph(50, 0.3, 21)
+    csr = CSRGraph.from_edges(src, dst)
+    d = decide_set_level(csr, threshold=4096)  # force a dense cohort
+    assert len(d.dense_ids) >= 2
+    bs = I.build_blocked_bitset(csr.offsets, csr.neighbors, d.dense_ids,
+                                csr.n, 256)
+    rng_ = np.random.default_rng(2)
+    u = d.dense_ids[rng_.integers(0, len(d.dense_ids), 30)]
+    v = d.dense_ids[rng_.integers(0, len(d.dense_ids), 30)]
+    got = bitset_pair_count(bs, bs.slot_of[u], bs.slot_of[v],
+                            interpret=True)
+    want = I.intersect_count_uint_np(csr.offsets, csr.neighbors, u, v)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pagerank_fixpoint_ell_kernel_under_device_backend():
+    """The analytics fixpoint path picks the ELL Pallas kernel under the
+    device backend and matches the numpy oracle."""
+    from repro.core.recursion import pagerank, pagerank_np
+    from repro.core.trie import CSRGraph
+
+    src, dst, _ = random_undirected_graph(24, 0.3, 12)
+    csr = CSRGraph.from_edges(src, dst)
+    b = DeviceBackend()
+    got = pagerank(csr, iters=4, backend=b)
+    want = pagerank_np(csr, iters=4)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert b.stats["spmv.ell_kernel"] == 4
+
+
+# --------------------------------------------------------------- construction
+def test_make_backend_resolution(monkeypatch):
+    assert isinstance(make_backend("numpy"), NumpyBackend)
+    assert isinstance(make_backend("device"), DeviceBackend)
+    b = DeviceBackend()
+    assert make_backend(b) is b
+    monkeypatch.setenv("REPRO_ENGINE_BACKEND", "device")
+    assert isinstance(make_backend(None), DeviceBackend)
+    monkeypatch.delenv("REPRO_ENGINE_BACKEND")
+    assert isinstance(make_backend(None), NumpyBackend)
+    with pytest.raises(ValueError):
+        make_backend("tpu9000")
