@@ -42,6 +42,7 @@ def run_backend_suite(smoke: bool) -> list:
     rather than silently timed.
     """
     from repro.core.engine import Engine
+    from repro.core.executor import BagResultCache
     from repro.core.workload import ALIASES, paper_query_set
     from repro.data import powerlaw_graph
 
@@ -62,6 +63,10 @@ def run_backend_suite(smoke: bool) -> list:
             res = None
             dispatch = {}
             for _ in range(reps):
+                # fresh engine-lifetime bag cache per rep: the suite times
+                # the join work (paper protocol), not cross-query reuse —
+                # within-query cross-rule hits still occur and are counted
+                eng.bag_cache = BagResultCache()
                 before = dict(eng.backend.stats)
                 t0 = time.perf_counter()
                 res = eng.query(q)
@@ -81,6 +86,11 @@ def run_backend_suite(smoke: bool) -> list:
                 "parity": bool(np.isclose(digest, digests[qname],
                                           rtol=1e-5, atol=1e-6)),
                 "dispatch": dispatch,
+                # optimizer choices per executed rule: fhw, attribute
+                # order, per-level layout routing + threshold, estimated
+                # vs actual cardinalities — so plan-quality regressions
+                # are visible in the artifact, not just wall time.
+                "plan": eng.plan_metadata(),
             })
     return out
 

@@ -96,14 +96,19 @@ class ExecBackend:
         p0 = np.repeat(lo0, cnt) + (flat - seg_start)
         return row_id, p0
 
-    def _pair_store(self, trie):
+    def _pair_store(self, trie, threshold: Optional[float] = None):
         raise NotImplementedError
 
-    def has_pair_store(self, trie) -> bool:
-        return self._pair_store(trie) is not None
+    def has_pair_store(self, trie,
+                       threshold: Optional[float] = None) -> bool:
+        return self._pair_store(trie, threshold) is not None
 
-    def pair_count(self, trie, u: np.ndarray, v: np.ndarray):
-        store = self._pair_store(trie)
+    def pair_count(self, trie, u: np.ndarray, v: np.ndarray,
+                   threshold: Optional[float] = None):
+        """Binary terminal-fold fast path. ``threshold`` is the plan IR's
+        statistics-driven Algorithm-3 density threshold (None lets the
+        layout store profile the trie itself)."""
+        store = self._pair_store(trie, threshold)
         if store is None:
             return None
         self.stats["fold.pair_count_calls"] += 1
@@ -139,8 +144,9 @@ class NumpyBackend(ExecBackend):
             pos[id(a)] = p[keep]
         return row_id, vals, pos
 
-    def _pair_store(self, trie):
-        return engine_store_for(trie, counter=self.stats, cache_tag="host")
+    def _pair_store(self, trie, threshold=None):
+        return engine_store_for(trie, counter=self.stats, cache_tag="host",
+                                threshold=threshold)
 
 
 class DeviceBackend(ExecBackend):
@@ -204,11 +210,12 @@ class DeviceBackend(ExecBackend):
         return out_row, out_vals, pos
 
     # ------------------------------------------------------ terminal folds
-    def _pair_store(self, trie):
+    def _pair_store(self, trie, threshold=None):
         return engine_store_for(trie, word_kernel=self._word_kernel,
                                  uint_kernel=self._uint_kernel,
                                  uint_max_len=self._uint_max_len,
-                                 counter=self.stats, cache_tag="device")
+                                 counter=self.stats, cache_tag="device",
+                                 threshold=threshold)
 
 
 @jax.jit

@@ -72,6 +72,15 @@ class BagPlan:
         return (f"bag[{rels}] order={self.var_order} "
                 f"out={self.output_vars} w={self.bag.width:.3g}")
 
+    def subtree_rels(self) -> Tuple[str, ...]:
+        """Every relation read anywhere in this bag's subtree — the set
+        whose catalog versions gate engine-lifetime result reuse
+        (``plan_ir.MaterializeShared.reuse_rels``)."""
+        rels = {a.rel for a in self.atoms}
+        for c in self.children:
+            rels.update(c.subtree_rels())
+        return tuple(sorted(rels))
+
 
 @dataclasses.dataclass
 class QueryPlan:
@@ -140,14 +149,39 @@ def compile_rule(rule: Rule, use_ghd: bool = True) -> QueryPlan:
             output_vars=tuple(v for v in var_order if v in retained),
             children=children,
         )
-        bp.dedup_key = _dedup_key(bp, semiring)
         return bp
 
     root = build(g.root)
     root_attrs = set(g.root.attrs)
     needs_top_down = not out_set <= root_attrs
+    if needs_top_down and semiring is None:
+        # Listing query whose outputs span bags: the final acyclic join of
+        # the reduced bag results (plan_ir.TopDownJoin) connects bags on
+        # their shared attributes, so every bag must RETAIN the attrs it
+        # shares with its children — projecting them away (the seed
+        # behaviour) degenerated the final join into a cross product.
+        _retain_connectors(root)
+    # Dedup keys include output_vars, so assign them only after the
+    # connector-retention pass above.
+    def assign_keys(bp: BagPlan):
+        for c in bp.children:
+            assign_keys(c)
+        bp.dedup_key = _dedup_key(bp, semiring)
+
+    assign_keys(root)
     return QueryPlan(rule, hg, g, order, root, semiring, agg_arg,
                      output_vars, needs_top_down)
+
+
+def _retain_connectors(bp: BagPlan):
+    for c in bp.children:
+        _retain_connectors(c)
+    connectors = set()
+    for c in bp.children:
+        connectors |= set(c.bag.shared_with_parent)
+    if connectors - set(bp.output_vars):
+        retained = set(bp.output_vars) | connectors
+        bp.output_vars = tuple(v for v in bp.var_order if v in retained)
 
 
 def _dedup_key(bp: BagPlan, semiring) -> Tuple:

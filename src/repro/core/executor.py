@@ -1,5 +1,11 @@
 """Physical plan execution: Yannakakis over GHD bags (paper Section 3.3).
 
+The executor is the *interpreter lowering* of the physical plan IR
+(``core.plan_ir``) — the differential-testing oracle for the code
+generator (``core.codegen``), which lowers the SAME IR to straight-line
+source.  Neither lowering re-derives a physical decision: access paths,
+layout thresholds, routing hints, and reuse keys are read off the IR.
+
 Two phases, exactly as the paper describes:
 
   * **Within a node** — each bag runs the generic worst-case optimal join
@@ -12,12 +18,19 @@ Two phases, exactly as the paper describes:
     outputs live in the root, the annotation rides along and the top-down
     pass is elided (Appendix A.1). For listing queries, the final result
     is assembled by joining the reduced bag results (the "top-down walk"
-    as one acyclic worst-case-optimal join).
+    as one acyclic worst-case-optimal join) — the IR's ``TopDownJoin``
+    operator, whose inputs reference every reduced bag structurally.
 
-Appendix A.1 "Eliminating Redundant Work" is implemented via
-``BagPlan.dedup_key``: structurally equivalent bags (same relations, same
-canonicalized pattern, same aggregations, same subtrees) are computed once
-— this is the 2x saving on the Barbell query the paper reports.
+Appendix A.1 "Eliminating Redundant Work" operates at two scopes:
+
+  * per-query: structurally equivalent bags (``BagPlan.dedup_key``) are
+    computed once — the 2x saving on the Barbell query;
+  * engine-lifetime: :class:`BagResultCache` keys a bag's result on its
+    canonicalized structure PLUS the catalog versions of every relation
+    its subtree reads (``MaterializeShared.reuse_struct/reuse_rels``), so
+    shared sub-bags recur across *rules and iterations* without being
+    recomputed, and are invalidated the moment an input relation is
+    reloaded.
 """
 from __future__ import annotations
 
@@ -26,31 +39,39 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.compile import BagPlan, PlanAtom, QueryPlan
+from repro.core.compile import QueryPlan
 from repro.core.datalog import eval_expr
 from repro.core.gj import GenericJoin, GJResult
-from repro.core.semiring import Semiring
 from repro.core.trie import Trie
 
 
 @dataclasses.dataclass
 class ExecStats:
     bags_run: int = 0
-    bags_deduped: int = 0
+    bags_deduped: int = 0          # per-query structural dedup (Appendix A.1)
+    bags_cached: int = 0           # engine-lifetime BagResultCache hits
     intersect_rows: int = 0
 
 
 class Catalog:
-    """Relation storage: base tries + reorder cache + aliases."""
+    """Relation storage: base tries + reorder cache + aliases.
+
+    Every ``add`` bumps the relation's version counter; engine-lifetime
+    bag-result reuse keys include these versions, so reloading a relation
+    (or a recursion round rebuilding its delta) invalidates exactly the
+    cached results that read it.
+    """
 
     def __init__(self):
         self.tries: Dict[str, Trie] = {}
         self.aliases: Dict[str, str] = {}
         self._reordered: Dict[Tuple[str, Tuple[int, ...]], Trie] = {}
         self.scalars: Dict[str, object] = {}
+        self.versions: Dict[str, int] = {}
 
     def add(self, name: str, trie: Trie):
         self.tries[name] = trie
+        self.versions[name] = self.versions.get(name, 0) + 1
         self._reordered = {k: v for k, v in self._reordered.items()
                            if k[0] != name}
 
@@ -71,6 +92,15 @@ class Catalog:
     def __contains__(self, name: str) -> bool:
         return self.resolve(name) in self.tries
 
+    def version(self, name: str) -> int:
+        return self.versions.get(self.resolve(name), 0)
+
+    def version_key(self, names: Tuple[str, ...]) -> Tuple:
+        """(resolved name, version) per relation — the data-identity half
+        of an engine-lifetime bag reuse key (generated code calls this at
+        run time so stale emitted keys are impossible)."""
+        return tuple((self.resolve(n), self.version(n)) for n in names)
+
     def reordered(self, name: str, perm: Tuple[int, ...]) -> Trie:
         """Trie for ``name`` with columns permuted by ``perm`` (an index
         order; paper Section 2.2 "Column (Index) Order")."""
@@ -83,106 +113,153 @@ class Catalog:
         return self._reordered[key]
 
 
+class BagResultCache:
+    """Engine-lifetime Appendix-A.1 cache: bag reuse key -> GJResult.
+
+    Bounded FIFO (recursion bumps relation versions every round, so stale
+    keys age out instead of accumulating). Results are treated as
+    immutable by every consumer.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._data: Dict[Tuple, GJResult] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Tuple) -> Optional[GJResult]:
+        res = self._data.get(key)
+        if res is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return res
+
+    def put(self, key: Tuple, res: GJResult):
+        if len(self._data) >= self.maxsize:
+            self._data.pop(next(iter(self._data)))
+        self._data[key] = res
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+
 class Executor:
+    """Interpreter lowering of the physical plan IR."""
+
     def __init__(self, catalog: Catalog,
                  encode: Optional[Callable[[object], int]] = None,
-                 backend=None):
+                 backend=None,
+                 bag_cache: Optional[BagResultCache] = None,
+                 stats_catalog=None):
         self.catalog = catalog
         self.encode = encode or (lambda v: int(v))
         self.backend = backend  # None -> GenericJoin resolves the default
+        self.bag_cache = bag_cache
+        self.stats_catalog = stats_catalog
         self.stats = ExecStats()
+        # per-run optimizer scorecard: materialize op id -> {est, actual}
+        self.metrics: Dict[int, dict] = {}
 
     # ------------------------------------------------------------------ api
-    def run(self, plan: QueryPlan) -> GJResult:
+    def run(self, plan) -> GJResult:
+        """Execute a PhysicalPlan (or a QueryPlan, annotated on the fly)."""
+        from repro.core import plan_ir
+        from repro.core.statistics import StatisticsCatalog
+        if isinstance(plan, QueryPlan):
+            pplan = plan_ir.build_physical_plan(
+                plan, self.stats_catalog or StatisticsCatalog(),
+                self.catalog)
+        else:
+            pplan = plan
+        lplan = pplan.logical
+
         self.stats = ExecStats()
+        self.metrics = {}
         dedup_cache: Dict[Tuple, GJResult] = {}
-        aggregate = plan.semiring is not None
-        if aggregate and plan.needs_top_down:
+        aggregate = lplan.semiring is not None
+        if aggregate and lplan.needs_top_down:
             raise ValueError(
                 "aggregate outputs must live in the root bag; recompile "
                 "with use_ghd=False (engine does this automatically)")
 
-        bag_results: Dict[int, GJResult] = {}
-
-        def eval_bag(bp: BagPlan) -> GJResult:
-            child_res = [eval_bag(c) for c in bp.children]
-            key = bp.dedup_key
+        results: Dict[int, GJResult] = {}   # materialize op id -> result
+        for bops in pplan.bag_ops:          # bottom-up: children first
+            out_vars = bops.materialize.output_vars
+            key = bops.logical.dedup_key
             if key in dedup_cache:
                 self.stats.bags_deduped += 1
-                res = dedup_cache[key]
+                res = rename_result(dedup_cache[key], out_vars)
             else:
-                res = self._run_bag(bp, child_res, aggregate, plan)
+                ck = self._reuse_key(bops.materialize)
+                res = self.bag_cache.get(ck) if self.bag_cache else None
+                if res is not None:
+                    self.stats.bags_cached += 1
+                    res = rename_result(res, out_vars)
+                else:
+                    res, level_actuals = self._run_bag(bops, results,
+                                                       aggregate, lplan)
+                    self.stats.bags_run += 1
+                    if self.bag_cache is not None:
+                        self.bag_cache.put(ck, res)
+                    self.metrics[bops.materialize.op_id] = {
+                        "est_rows": float(bops.materialize.est_rows),
+                        "actual_rows": int(res.num_rows),
+                        "level_actuals": level_actuals,
+                    }
                 dedup_cache[key] = res
-                self.stats.bags_run += 1
-            bag_results[id(bp)] = res
-            return res
+            results[bops.materialize.op_id] = res
+            self.metrics.setdefault(bops.materialize.op_id, {
+                "est_rows": float(bops.materialize.est_rows),
+                "actual_rows": int(res.num_rows),
+            })
 
-        root_res = eval_bag(plan.root)
-
-        if len(plan.root.children) == 0 or aggregate:
+        root_res = results[pplan.root.materialize.op_id]
+        if pplan.final is None:
             final = root_res
         else:
-            # Listing query across bags: join the reduced bag results (the
-            # paper's top-down walk, evaluated as one acyclic WCO join).
-            final = self._final_join(plan, bag_results)
-
-        return self._apply_expr(plan, final)
+            final = self._final_join(pplan, results)
+        return self._apply_expr(lplan, final)
 
     # ------------------------------------------------------------ internals
-    def _run_bag(self, bp: BagPlan, child_res: List[GJResult],
-                 aggregate: bool, plan: QueryPlan) -> GJResult:
+    def _reuse_key(self, mat) -> Tuple:
+        return (mat.reuse_struct,
+                self.catalog.version_key(mat.reuse_rels))
+
+    def _run_bag(self, bops, results: Dict[int, GJResult],
+                 aggregate: bool, lplan: QueryPlan) -> GJResult:
         gj_atoms: List[Tuple[Trie, Tuple[str, ...]]] = []
         selections: Dict[int, Dict[int, int]] = {}
-        for a in bp.atoms:
-            trie, vars_, sel = self._atom_trie(a, bp.var_order)
+        for acc in bops.scan.accesses:
+            sel = acc.selection_map(self.encode)
             if sel:
                 selections[len(gj_atoms)] = sel
-            gj_atoms.append((trie, vars_))
-
-        for c, res in zip(bp.children, child_res):
-            shared = tuple(v for v in c.bag.shared_with_parent)
-            # order shared vars by this bag's var_order
-            shared = tuple(v for v in bp.var_order if v in set(shared))
-            t = _result_to_trie(res, shared,
+            gj_atoms.append((self.catalog.reordered(acc.rel, acc.perm),
+                             acc.vars))
+        for ci in bops.scan.child_inputs:
+            t = _result_to_trie(results[ci.op_id], ci.vars,
                                 keep_annotation=aggregate)
-            gj_atoms.append((t, shared))
+            gj_atoms.append((t, ci.vars))
 
-        semiring = plan.semiring if aggregate else None
-        gj = GenericJoin(gj_atoms, bp.var_order, bp.output_vars,
+        semiring = lplan.semiring if aggregate else None
+        gj = GenericJoin(gj_atoms, bops.scan.var_order,
+                         bops.materialize.output_vars,
                          semiring=semiring, selections=selections,
-                         backend=self.backend)
+                         backend=self.backend, hints=bops.hints())
         res = gj.run()
         self.stats.intersect_rows += res.num_rows
-        return res
+        return res, gj.level_actuals
 
-    def _atom_trie(self, a: PlanAtom, var_order: Tuple[str, ...]):
-        """Reorder the atom's trie: selected positions first, live vars by
-        the bag attribute order. Returns (trie, vars, selections)."""
-        order_pos = {v: i for i, v in enumerate(var_order)}
-        sel_positions = sorted(a.selections.keys())
-        live_positions = [p for p in range(len(a.vars))
-                          if p not in a.selections]
-        live_positions.sort(key=lambda p: order_pos[a.vars[p]])
-        perm = tuple(sel_positions + live_positions)
-        trie = self.catalog.reordered(a.rel, perm)
-        vars_ = tuple(a.vars[p] for p in perm)
-        sels = {i: self.encode(a.selections[p])
-                for i, p in enumerate(sel_positions)}
-        return trie, vars_, sels
-
-    def _final_join(self, plan: QueryPlan,
-                    bag_results: Dict[int, GJResult]) -> GJResult:
+    def _final_join(self, pplan, results: Dict[int, GJResult]) -> GJResult:
+        """The IR's TopDownJoin: one acyclic WCO join over the reduced bag
+        results, inputs referenced structurally by operator id."""
+        td = pplan.final
         atoms: List[Tuple[Trie, Tuple[str, ...]]] = []
-        all_bags = plan.bags_bottom_up()
-        for bp in all_bags:
-            res = bag_results[id(bp)]
-            if not res.vars:
-                continue
+        for op_id in td.inputs:
+            res = results[op_id]
             t = _result_to_trie(res, res.vars, keep_annotation=False)
             atoms.append((t, res.vars))
-        var_order = tuple(v for v in plan.order
-                          if any(v in vs for _, vs in atoms))
-        gj = GenericJoin(atoms, var_order, plan.output_vars, semiring=None,
+        gj = GenericJoin(atoms, td.var_order, td.output_vars, semiring=None,
                          backend=self.backend)
         return gj.run()
 
@@ -206,6 +283,20 @@ def apply_expr(plan: QueryPlan, res: GJResult, scalars: Dict) -> GJResult:
         return GJResult(res.vars, res.columns, ann)
     value = eval_expr(expr, np.asarray(agg_value), scalars)
     return GJResult(res.vars, res.columns, np.asarray(value))
+
+
+def rename_result(res: GJResult, vars_: Tuple[str, ...]) -> GJResult:
+    """Re-label a reused bag result with this occurrence's variable names.
+
+    Equivalent bags match on a variable-CANONICALIZED key, so a hit may
+    carry the other occurrence's names (Barbell: the (x,y,z) triangle's
+    result reused for (a,b,c)); the canonical output key guarantees
+    positional correspondence. Columns are shared, never copied."""
+    if res.vars == tuple(vars_):
+        return res
+    assert len(res.vars) == len(vars_), (res.vars, vars_)
+    cols = {t: res.columns[s] for s, t in zip(res.vars, vars_)}
+    return GJResult(tuple(vars_), cols, res.annotation)
 
 
 def _result_to_trie(res: GJResult, vars_: Tuple[str, ...],

@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import warnings
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.core.agm import fractional_cover_number
@@ -63,6 +64,9 @@ class GHD:
     root: Bag
     width: float                    # fractional hypertree width of this plan
     hypergraph: Hypergraph
+    # True when decompose() hit its partition budget before exhausting the
+    # search space — the returned GHD is best-so-far, not proven minimal.
+    search_exhausted: bool = False
 
     def bags(self) -> List[Bag]:
         return list(self.root.walk())
@@ -164,9 +168,13 @@ def decompose(hg: Hypergraph,
             width_cache[key] = fractional_cover_number(hg, key)
         return width_cache[key]
 
+    truncated = False
     for partition in _set_partitions(range(E)):
         n_seen += 1
         if n_seen > max_partitions:
+            # Best-so-far is returned, but silently truncating hid plan
+            # quality regressions: record it on the GHD and warn.
+            truncated = True
             break
         chis = [frozenset(hg.edge_vars(g)) for g in partition]
         parent, ok = _mst_rip_tree(chis)
@@ -192,8 +200,16 @@ def decompose(hg: Hypergraph,
             best = (partition, chis, parent, widths, root_idx)
 
     assert best is not None, "no GHD found (disconnected RIP failure?)"
+    if truncated:
+        warnings.warn(
+            f"GHD search truncated at max_partitions={max_partitions} "
+            f"({E} hyperedges): returning the best decomposition seen so "
+            f"far (width {best_key[0]:.3g}); plan may be suboptimal",
+            RuntimeWarning, stacklevel=2)
     partition, chis, parent, widths, root_idx = best
-    return _build_tree(hg, partition, chis, parent, widths, root_idx)
+    g = _build_tree(hg, partition, chis, parent, widths, root_idx)
+    g.search_exhausted = truncated
+    return g
 
 
 def _build_tree(hg, partition, chis, parent, widths, root_idx) -> GHD:

@@ -95,7 +95,8 @@ class GenericJoin:
                  output_vars: Sequence[str],
                  semiring: Optional[Semiring] = None,
                  selections: Optional[Dict[int, Dict[int, int]]] = None,
-                 backend=None):
+                 backend=None,
+                 hints=None):
         """
         atoms: (trie, vars) pairs; trie attr order must equal the global order
           restricted to its vars (callers re-index via Trie.reorder).
@@ -108,12 +109,20 @@ class GenericJoin:
         selections: atom_idx -> {attr_pos: constant} equality selections.
         backend: ExecBackend carrying out extensions/intersections; None
           resolves the process default (REPRO_ENGINE_BACKEND).
+        hints: plan_ir.BagHints — physical annotations decided by the plan
+          IR (statistics-driven Algorithm-3 layout threshold, terminal-fold
+          routing). None keeps the backend defaults.
         """
         self.backend = (backend if backend is not None
                         else backend_mod.default_backend())
         self.var_order = tuple(var_order)
         self.output_vars = tuple(output_vars)
         self.semiring = semiring
+        self.hints = hints
+        # per-extension actual frontier sizes [(var, rows)], written by
+        # run(); both lowerings forward these through their metrics dicts
+        # into Engine.plan_metadata()'s per-step actual_rows
+        self.level_actuals: List[Tuple[str, int]] = []
         self.atoms: List[BoundAtom] = []
         selections = selections or {}
         for i, (trie, vars_) in enumerate(atoms):
@@ -198,6 +207,7 @@ class GenericJoin:
                     ann = ann[keep]
                     F = len(keep)
                 # frontier unchanged otherwise; v folded away
+                self.level_actuals.append((v, int(F)))
                 continue
             row_id, vals, pos = self._extend(cons, F)
             # rebuild frontier
@@ -217,6 +227,7 @@ class GenericJoin:
                     if a.depth == len(a.trie.attrs) and a.trie.annotation is not None:
                         ann = sr.mul(ann, a.trie.annotation[a.cursor])
             F = len(vals)
+            self.level_actuals.append((v, int(F)))
             if F == 0:
                 # empty join: emit an empty result with all output columns
                 empty_cols = {k: np.zeros(0, np.int32) for k in self.output_vars}
@@ -291,15 +302,21 @@ class GenericJoin:
             # Binary self-join terminal (the triangle hot path): route
             # through the backend's set-level layout store — bitset cohort
             # pairs take the AND+popcount kernel, sparse pairs the uint
-            # kernel or lockstep search (paper Section 4; layout mode via
-            # layouts.set_engine_layout_mode).
-            if (a.trie is b.trie and a.trie.arity == 2
+            # kernel or lockstep search (paper Section 4). The plan IR's
+            # TerminalFold annotation decides the route and the
+            # statistics-driven Algorithm-3 threshold; without hints the
+            # store falls back to its own statistics profile.
+            thr = self.hints.layout_threshold if self.hints else None
+            routed_off = (self.hints is not None
+                          and self.hints.terminal_routing == "search")
+            if (not routed_off
+                    and a.trie is b.trie and a.trie.arity == 2
                     and a.depth == 1 and b.depth == 1
                     and a.cursor is not None and b.cursor is not None
-                    and self.backend.has_pair_store(a.trie)):
+                    and self.backend.has_pair_store(a.trie, threshold=thr)):
                 u = a.trie.levels[0].values[a.cursor].astype(np.int64)
                 v = b.trie.levels[0].values[b.cursor].astype(np.int64)
-                out = self.backend.pair_count(a.trie, u, v)
+                out = self.backend.pair_count(a.trie, u, v, threshold=thr)
                 if out is not None:
                     return out
         # chain: materialize smallest two's intersection per row, count others

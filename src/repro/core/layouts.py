@@ -26,6 +26,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core import intersect as I
+from repro.core import statistics
 from repro.core.trie import CSRGraph
 
 # Paper default: the width of an AVX register (256). TPU-native block size is
@@ -104,33 +105,53 @@ def engine_store_for(trie, *, word_kernel: Optional[Callable] = None,
                      uint_kernel: Optional[Callable] = None,
                      uint_max_len: int = 256,
                      counter=None,
-                     cache_tag: str = "host") -> Optional["HybridSetStore"]:
+                     cache_tag: str = "host",
+                     threshold: Optional[float] = None,
+                     ) -> Optional["HybridSetStore"]:
     """Per-trie cached HybridSetStore for the engine's binary terminal
     folds (built lazily on first use; index build time is excluded from
     query timing, as in the paper).
 
-    Stores are cached per (layout mode, cache_tag) so the numpy and
-    device backends — which inject different intersection kernels — each
-    keep their own resident index on the same trie. ``counter`` (a
-    Counter-like mapping) is rebound on every call so dispatch
-    instrumentation always lands on the calling backend.
+    ``threshold`` is the Algorithm-3 density threshold. The plan IR
+    passes the statistics-driven value from its TerminalFold annotation;
+    when None (legacy callers), the same statistics profile is computed
+    here (``statistics.layout_threshold_for``) — either way the decision
+    is data-driven, not the fixed SIMD_REGISTER_BITS constant. The
+    threshold used is recorded in the dispatch counters
+    (``layout.threshold_bits`` / ``layout.stats_driven``).
+
+    Stores are cached per (layout mode, cache_tag, threshold) so the
+    numpy and device backends — which inject different intersection
+    kernels — each keep their own resident index on the same trie.
+    ``counter`` (a Counter-like mapping) is rebound on every call so
+    dispatch instrumentation always lands on the calling backend.
     """
     if _ENGINE_LAYOUT_MODE == "off":
         return None
+    if _ENGINE_LAYOUT_MODE == "uint":
+        thr_key = "uint"
+    else:
+        if threshold is None:
+            threshold = statistics.layout_threshold_for(trie)
+        thr_key = int(round(threshold))
     cache = getattr(trie, "_hybrid_stores", None)
     if cache is None:
         cache = trie._hybrid_stores = {}
-    key = (_ENGINE_LAYOUT_MODE, cache_tag)
+    key = (_ENGINE_LAYOUT_MODE, cache_tag, thr_key)
     store = cache.get(key)
     if store is None:
         csr = CSRGraph.from_trie(trie)
         decision = (decide_relation_level(csr, "uint")
                     if _ENGINE_LAYOUT_MODE == "uint" else None)
-        store = HybridSetStore.build(csr, decision=decision,
+        store = HybridSetStore.build(csr, threshold=threshold or SIMD_REGISTER_BITS,
+                                     decision=decision,
                                      word_kernel=word_kernel,
                                      uint_kernel=uint_kernel,
                                      uint_max_len=uint_max_len)
         cache[key] = store
+    if counter is not None and _ENGINE_LAYOUT_MODE == "set":
+        counter["layout.stats_driven"] += 1
+        counter["layout.threshold_bits"] = int(thr_key)
     store.counter = counter
     return store
 

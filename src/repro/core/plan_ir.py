@@ -1,0 +1,406 @@
+"""Typed physical plan IR between ``compile.QueryPlan`` and execution.
+
+The logical plan (rule -> hypergraph -> GHD, ``core.compile``) says *what*
+to join; this module decides *how*, once, in one place.  A
+:class:`PhysicalPlan` is an explicit operator DAG —
+
+  * :class:`BagScan` — the physical access paths of one GHD bag: per-atom
+    trie reorder permutation + leading equality selections, plus
+    structural references to the child bags' materialized results,
+  * :class:`Extend` — one Generic-Join attribute extension, annotated with
+    the estimated fanout and cumulative cardinality,
+  * :class:`TerminalFold` — the early-aggregation fold of the last
+    non-retained attribute, annotated with the backend routing hint and
+    the statistics-driven Algorithm-3 layout threshold,
+  * :class:`MaterializeShared` — the bag's output projection passed up the
+    GHD, carrying the engine-lifetime reuse key (Appendix A.1 dedup,
+    generalized from per-query to cross-rule/cross-iteration),
+  * :class:`TopDownJoin` — the final acyclic join of the reduced bag
+    results for listing queries spanning bags, referencing its inputs
+    *structurally* by operator id (this is what deleted the old
+    ``codegen._bag_names`` source-text scraping).
+
+Both lowerings — the interpreter (``core.executor``, the oracle) and the
+code generator (``core.codegen``) — walk this DAG; neither re-derives a
+physical decision.  ``GenericJoin`` and the backends consume the
+annotations via :class:`BagHints`.  Estimated cardinalities come from the
+:class:`~repro.core.statistics.StatisticsCatalog` under an independence
+model capped by the bag's AGM bound (``core.agm`` with real relation
+sizes), and are written next to the *actual* cardinalities into the
+benchmark artifact so optimizer mispredictions are visible per run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import agm
+from repro.core.compile import BagPlan, PlanAtom, QueryPlan
+from repro.core.statistics import StatisticsCatalog, TrieStats
+
+
+# ------------------------------------------------------------ access paths
+@dataclasses.dataclass(frozen=True)
+class AtomAccess:
+    """Physical access path for one atom: which trie index order to use
+    (selected positions lead, live vars follow the bag attribute order)
+    and the leading equality selections. This logic previously lived
+    twice, in ``executor._atom_trie`` and inline in ``codegen``."""
+
+    rel: str
+    perm: Tuple[int, ...]                       # column permutation
+    vars: Tuple[str, ...]                       # post-perm variable names
+    selections: Tuple[Tuple[int, object], ...]  # (post-perm pos, raw const)
+
+    @staticmethod
+    def from_plan_atom(a: PlanAtom, var_order: Tuple[str, ...]) -> "AtomAccess":
+        order_pos = {v: i for i, v in enumerate(var_order)}
+        sel_positions = sorted(a.selections.keys())
+        live_positions = [p for p in range(len(a.vars))
+                          if p not in a.selections]
+        live_positions.sort(key=lambda p: order_pos[a.vars[p]])
+        perm = tuple(sel_positions + live_positions)
+        vars_ = tuple(a.vars[p] for p in perm)
+        sels = tuple((i, a.selections[p]) for i, p in enumerate(sel_positions))
+        return AtomAccess(a.rel, perm, vars_, sels)
+
+    @property
+    def live_vars(self) -> Tuple[str, ...]:
+        return self.vars[len(self.selections):]
+
+    def selection_map(self, encode) -> Dict[int, int]:
+        return {i: encode(v) for i, v in self.selections}
+
+
+@dataclasses.dataclass(frozen=True)
+class ChildInput:
+    """Structural reference to a child bag's materialized result."""
+
+    op_id: int                  # the child's MaterializeShared op id
+    vars: Tuple[str, ...]       # shared attrs, ordered by the parent order
+
+
+# ------------------------------------------------------------ operator DAG
+@dataclasses.dataclass
+class PlanOp:
+    op_id: int
+    est_rows: float             # estimated cardinality after this operator
+
+
+@dataclasses.dataclass
+class BagScan(PlanOp):
+    accesses: Tuple[AtomAccess, ...]
+    child_inputs: Tuple[ChildInput, ...]
+    var_order: Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class Extend(PlanOp):
+    var: str
+    n_constraining: int
+    est_fanout: float
+
+
+@dataclasses.dataclass
+class TerminalFold(PlanOp):
+    var: str
+    semiring: str
+    routing: str                        # "pair_kernel" | "search"
+    layout_threshold: Optional[float]   # Algorithm-3 threshold (stats-driven)
+
+
+@dataclasses.dataclass
+class MaterializeShared(PlanOp):
+    source: int                          # BagScan op id
+    output_vars: Tuple[str, ...]
+    keep_annotation: bool
+    reuse_struct: Tuple                  # canonicalized structural key
+    reuse_rels: Tuple[str, ...]          # relations whose versions gate reuse
+
+
+@dataclasses.dataclass
+class TopDownJoin(PlanOp):
+    inputs: Tuple[int, ...]              # MaterializeShared op ids
+    var_order: Tuple[str, ...]
+    output_vars: Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class BagHints:
+    """The IR annotations GenericJoin / the backend consume at run time."""
+
+    layout_threshold: Optional[float] = None
+    terminal_routing: Optional[str] = None
+    est_rows: Optional[float] = None
+
+
+@dataclasses.dataclass
+class BagOps:
+    """One GHD bag's operator pipeline."""
+
+    logical: BagPlan
+    scan: BagScan
+    steps: Tuple[PlanOp, ...]            # Extend | TerminalFold per attr
+    materialize: MaterializeShared
+
+    def hints(self) -> BagHints:
+        thr = None
+        routing = None
+        for s in self.steps:
+            if isinstance(s, TerminalFold):
+                thr = s.layout_threshold
+                routing = s.routing
+        return BagHints(layout_threshold=thr, terminal_routing=routing,
+                        est_rows=self.materialize.est_rows)
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    logical: QueryPlan
+    bag_ops: List[BagOps]                # bottom-up (children first)
+    final: Optional[TopDownJoin]         # listing queries spanning bags
+    ops: Dict[int, PlanOp]
+
+    @property
+    def root(self) -> BagOps:
+        return self.bag_ops[-1]
+
+    def pretty(self) -> str:
+        lines = [f"physical plan: order={self.logical.order} "
+                 f"out={self.logical.output_vars} "
+                 f"fhw={self.logical.ghd.width:.3g}"]
+        for b in self.bag_ops:
+            atoms = ", ".join(f"{a.rel}({','.join(a.vars)})"
+                              for a in b.scan.accesses)
+            lines.append(f"  bag#{b.scan.op_id} [{atoms}] "
+                         f"est_rows={b.materialize.est_rows:.3g}")
+            for s in b.steps:
+                if isinstance(s, Extend):
+                    lines.append(f"    extend {s.var} "
+                                 f"fanout~{s.est_fanout:.3g} "
+                                 f"rows~{s.est_rows:.3g}")
+                else:
+                    lines.append(f"    fold {s.var} [{s.semiring}] "
+                                 f"route={s.routing} "
+                                 f"thr={s.layout_threshold}")
+        if self.final is not None:
+            lines.append(f"  top-down join over bags "
+                         f"{list(self.final.inputs)}")
+        return "\n".join(lines)
+
+    def metadata(self) -> dict:
+        """JSON-serializable optimizer-choice record (benchmark artifact)."""
+        plan = self.logical
+        bags = []
+        for b in self.bag_ops:
+            steps = []
+            for s in b.steps:
+                if isinstance(s, Extend):
+                    steps.append({"op": "extend", "var": s.var,
+                                  "est_fanout": float(s.est_fanout),
+                                  "est_rows": float(s.est_rows)})
+                else:
+                    steps.append({"op": "terminal_fold", "var": s.var,
+                                  "semiring": s.semiring,
+                                  "routing": s.routing,
+                                  "layout_threshold":
+                                      float(s.layout_threshold)
+                                      if s.layout_threshold is not None
+                                      else None})
+            bags.append({
+                "op_id": int(b.materialize.op_id),
+                "atoms": [f"{a.rel}({','.join(a.vars)})"
+                          for a in b.scan.accesses],
+                "var_order": list(b.scan.var_order),
+                "output_vars": list(b.materialize.output_vars),
+                "est_rows": float(b.materialize.est_rows),
+                "steps": steps,
+            })
+        return {
+            "head": plan.rule.head.rel,
+            "fhw": float(plan.ghd.width),
+            "order": list(plan.order),
+            "output_vars": list(plan.output_vars),
+            "needs_top_down": bool(plan.needs_top_down),
+            "search_exhausted": bool(getattr(plan.ghd, "search_exhausted",
+                                             False)),
+            "num_bags": len(self.bag_ops),
+            "top_down_inputs": (list(map(int, self.final.inputs))
+                                if self.final is not None else []),
+            "bags": bags,
+        }
+
+
+# ----------------------------------------------------------------- builder
+def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
+                        catalog) -> PhysicalPlan:
+    """Annotate the logical GHD plan into the physical operator DAG.
+
+    ``catalog`` is the executor's relation catalog — the builder resolves
+    each atom's reordered trie through it (the same identity-cached trie
+    the lowering will run on) to profile real data.
+    """
+    aggregate = plan.semiring is not None
+    counter = [0]
+    ops: Dict[int, PlanOp] = {}
+    bag_ops: List[BagOps] = []
+
+    def new_id() -> int:
+        counter[0] += 1
+        return counter[0]
+
+    def reg(op: PlanOp) -> PlanOp:
+        ops[op.op_id] = op
+        return op
+
+    def build_bag(bp: BagPlan) -> BagOps:
+        children = [build_bag(c) for c in bp.children]
+        accesses = tuple(AtomAccess.from_plan_atom(a, bp.var_order)
+                         for a in bp.atoms)
+        atom_tries: List[Optional[object]] = []
+        atom_stats: List[Optional[TrieStats]] = []
+        for acc in accesses:
+            try:
+                t = catalog.reordered(acc.rel, acc.perm)
+            except KeyError:
+                t = None
+            atom_tries.append(t)
+            atom_stats.append(stats.stats_for(t) if t is not None else None)
+
+        child_inputs = []
+        for cb in children:
+            shared = tuple(v for v in bp.var_order
+                           if v in set(cb.logical.bag.shared_with_parent))
+            child_inputs.append(ChildInput(cb.materialize.op_id, shared))
+        child_inputs = tuple(child_inputs)
+
+        scan = reg(BagScan(new_id(), 1.0, accesses, child_inputs,
+                           bp.var_order))
+
+        agm_cap = _bag_agm_bound(plan, bp, catalog)
+        steps: List[PlanOp] = []
+        frontier = 1.0
+        # live descent state mirrored from GenericJoin: per-input depth
+        depth = {i: len(acc.selections) for i, acc in enumerate(accesses)}
+        cdepth = {i: 0 for i in range(len(child_inputs))}
+        out_set = set(bp.output_vars)
+        for vi, v in enumerate(bp.var_order):
+            cons: List[Tuple[Optional[TrieStats], int, float]] = []
+            advancing_atoms, advancing_children = [], []
+            for i, acc in enumerate(accesses):
+                live = acc.live_vars
+                d = depth[i] - len(acc.selections)
+                if d < len(live) and live[d] == v:
+                    cons.append((atom_stats[i], depth[i], 0.0))
+                    advancing_atoms.append(i)
+            for i, ci in enumerate(child_inputs):
+                if cdepth[i] < len(ci.vars) and ci.vars[cdepth[i]] == v:
+                    child_est = ops[ci.op_id].est_rows
+                    cons.append((None, cdepth[i], child_est))
+                    advancing_children.append(i)
+            fanout = stats.extension_estimate(cons)
+            frontier = max(frontier * fanout, 1e-9)
+            if agm_cap is not None:
+                frontier = min(frontier, agm_cap)
+            last = vi == len(bp.var_order) - 1
+            terminal = aggregate and v not in out_set and last
+            if terminal:
+                routing, thr = _terminal_routing(
+                    accesses, advancing_atoms, advancing_children,
+                    atom_tries, atom_stats, depth, stats)
+                steps.append(reg(TerminalFold(
+                    new_id(), frontier, v, plan.semiring.name, routing, thr)))
+            else:
+                steps.append(reg(Extend(new_id(), frontier, v, len(cons),
+                                        fanout)))
+            for i in advancing_atoms:
+                depth[i] += 1
+            for i in advancing_children:
+                cdepth[i] += 1
+
+        est_out = frontier
+        if agm_cap is not None:
+            est_out = min(est_out, agm_cap)
+        mat = reg(MaterializeShared(
+            new_id(), est_out, scan.op_id, bp.output_vars,
+            keep_annotation=aggregate,
+            reuse_struct=_resolved_struct(bp.dedup_key, catalog.resolve),
+            reuse_rels=tuple(sorted({catalog.resolve(r)
+                                     for r in bp.subtree_rels()}))))
+        bops = BagOps(bp, scan, tuple(steps), mat)
+        # children appended themselves (and their subtrees) already, so the
+        # list order is bottom-up: every child precedes its parent.
+        bag_ops.append(bops)
+        return bops
+
+    root_ops = build_bag(plan.root)
+
+    final = None
+    if plan.root.children and not aggregate:
+        inputs = tuple(b.materialize.op_id for b in bag_ops
+                       if b.materialize.output_vars)
+        in_vars = set()
+        for b in bag_ops:
+            if b.materialize.output_vars:
+                in_vars |= set(b.materialize.output_vars)
+        var_order = tuple(v for v in plan.order if v in in_vars)
+        est = max((ops[i].est_rows for i in inputs), default=1.0)
+        final = TopDownJoin(counter[0] + 1, est, inputs, var_order,
+                            plan.output_vars)
+        counter[0] += 1
+        ops[final.op_id] = final
+
+    assert bag_ops[-1] is root_ops
+    return PhysicalPlan(plan, bag_ops, final, ops)
+
+
+def _resolved_struct(dedup_key: Tuple, resolve) -> Tuple:
+    """``BagPlan.dedup_key`` with relation names resolved through the
+    catalog's alias table — so structurally equivalent bags over ALIASES
+    of the same relation (Barbell's R,S,T vs R2,S2,T2, all = Edge) share
+    one engine-lifetime cache entry."""
+    atom_keys, out_key, sr_key, child_keys = dedup_key
+    atom_keys = tuple(sorted((resolve(rel), cols)
+                             for rel, cols in atom_keys))
+    child_keys = tuple(sorted(_resolved_struct(c, resolve)
+                              for c in child_keys))
+    return (atom_keys, out_key, sr_key, child_keys)
+
+
+def _bag_agm_bound(plan: QueryPlan, bp: BagPlan, catalog) -> Optional[float]:
+    """AGM bound of the bag sub-query with real relation sizes
+    (``min prod |R_e|^{x_e}``, paper Eq. 1) — the cap on every estimate."""
+    try:
+        log_sizes = {}
+        for ei in bp.bag.edge_idxs:
+            rel = plan.hg.edges[ei].rel
+            log_sizes[ei] = math.log(max(2, catalog.get(rel).num_tuples))
+        obj, _x = agm.fractional_cover(plan.hg, list(bp.bag.edge_idxs),
+                                       log_sizes)
+        return float(math.exp(min(obj, 700.0)))
+    except Exception:
+        return None
+
+
+def _terminal_routing(accesses, advancing_atoms, advancing_children,
+                      atom_tries, atom_stats, depth,
+                      stats: StatisticsCatalog):
+    """Routing hint + statistics-driven layout threshold for the terminal
+    fold.  The binary self-join pair-store path (Algorithm-3 cohorts,
+    ``HybridSetStore``) applies when exactly two physical atoms resolve to
+    the SAME reordered trie (aliases collapse through the catalog) with
+    arity 2, no selections, folding at depth 1 — the condition
+    ``gj._fold_count`` checks at run time, decided here once from the
+    plan."""
+    if advancing_children or len(advancing_atoms) != 2:
+        return "search", None
+    i, j = advancing_atoms
+    a, b = accesses[i], accesses[j]
+    ta, tb = atom_tries[i], atom_tries[j]
+    if (ta is None or ta is not tb or ta.arity != 2
+            or a.selections or b.selections
+            or depth[i] != 1 or depth[j] != 1):
+        return "search", None
+    from repro.core.statistics import layout_threshold
+    return "pair_kernel", layout_threshold(atom_stats[i], stats.block_bits)

@@ -1,0 +1,113 @@
+"""GHD planner tests: attribute-order tie-break regressions, the -GHD
+(single-bag) ablation parity over the full paper workload, and the
+search-budget truncation flag on ``ghd.decompose``."""
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import random_undirected_graph
+from repro.core import ghd as ghd_mod
+from repro.core import workload as W
+from repro.core.compile import compile_rule
+from repro.core.datalog import parse
+from repro.core.engine import Engine
+from repro.core.hypergraph import Hypergraph
+
+ALIASES = W.ALIASES
+
+
+def make_engine(src, dst, backend="numpy", use_ghd=True):
+    eng = Engine(backend=backend, use_ghd=use_ghd)
+    eng.load_edges("Edge", src, dst)
+    for a in ALIASES:
+        eng.alias(a, "Edge")
+    return eng
+
+
+# ------------------------------------------------------ attribute ordering
+def test_k4_appearance_order_tiebreak_regression():
+    """The symmetric K4 query: the global order must follow QUERY-
+    APPEARANCE order (x,y,z,a). The old alphabetical tie-break put the
+    4th clique vertex 'a' first and cost 7x (Table 8 benchmark)."""
+    rule = parse(W.FOUR_CLIQUE).rules[0]
+    plan = compile_rule(rule)
+    assert plan.order == ("x", "y", "z", "a")
+    assert plan.order[0] != "a"
+
+
+def test_attribute_order_shared_vars_lead_in_child_bags():
+    """Within a bag, attributes shared with the parent come first (they
+    are bound when the bag runs)."""
+    rule = parse(W.BARBELL).rules[0]
+    plan = compile_rule(rule)
+    for bp in plan.bags_bottom_up():
+        k = len(bp.bag.shared_with_parent)
+        if k:
+            assert set(bp.var_order[:k]) == set(bp.bag.shared_with_parent)
+
+
+# ------------------------------------------------- -GHD ablation parity
+def _digest(res):
+    if not res.vars:
+        return ("scalar", float(np.asarray(res.annotation)))
+    cols = np.stack([np.asarray(res.columns[v]) for v in res.vars], axis=1)
+    rows = {tuple(r) for r in cols.tolist()}
+    if res.annotation is None:
+        return ("rows", frozenset(rows))
+    order = np.lexsort(tuple(reversed([np.asarray(res.columns[v])
+                                       for v in res.vars])))
+    ann = np.asarray(res.annotation, dtype=np.float64)[order]
+    return ("annotated", frozenset(rows), tuple(np.round(ann, 5).tolist()))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "device"])
+@pytest.mark.parametrize("qname,query", [
+    ("triangle", W.TRIANGLE_COUNT),
+    ("triangle_list", W.TRIANGLE_LIST),
+    ("4clique", W.FOUR_CLIQUE),
+    ("lollipop", W.LOLLIPOP),
+    ("barbell", W.BARBELL),
+    ("pagerank", W.pagerank_program(iters=3)),
+    ("sssp", W.sssp_program("{s}")),
+])
+def test_single_bag_vs_ghd_parity(qname, query, backend):
+    """The GHD plan (early aggregation across bags) and the single-bag
+    WCOJ plan (-GHD ablation, the LogicBlox mode) must agree on every
+    paper workload query on both backends (paper Section 5.3.1)."""
+    src, dst, _ = random_undirected_graph(16, 0.3, 21)
+    q = query.replace("{s}", str(int(src[0])))
+    r1 = make_engine(src, dst, backend, use_ghd=True).query(q)
+    r2 = make_engine(src, dst, backend, use_ghd=False).query(q)
+    assert set(r1.vars) == set(r2.vars)
+    assert _digest(r1) == _digest(r2)
+
+
+# ------------------------------------------------- search-budget truncation
+def _barbell_hypergraph() -> Hypergraph:
+    return Hypergraph.from_rule(parse(W.BARBELL).rules[0])
+
+
+def test_decompose_search_exhausted_flag_and_warning():
+    hg = _barbell_hypergraph()  # 7 hyperedges: Bell(7)=877 partitions
+    with pytest.warns(RuntimeWarning, match="GHD search truncated"):
+        g = ghd_mod.decompose(hg, max_partitions=5)
+    assert g.search_exhausted is True
+    # the truncated result is still a valid (if possibly suboptimal) GHD
+    assert g.num_bags() >= 1
+
+
+def test_decompose_full_search_not_exhausted():
+    hg = _barbell_hypergraph()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        g = ghd_mod.decompose(hg)
+    assert g.search_exhausted is False
+    assert g.width == pytest.approx(1.5)
+
+
+def test_search_exhausted_surfaces_in_plan_metadata():
+    src, dst, _ = random_undirected_graph(12, 0.3, 23)
+    eng = make_engine(src, dst)
+    eng.query(W.TRIANGLE_COUNT)
+    assert eng.plan_metadata()[0]["search_exhausted"] is False
