@@ -7,12 +7,23 @@ prints ``name,us_per_call,derived`` CSV rows (paper protocol: 7 runs,
 trimmed mean) and writes ``BENCH_results.json`` — machine-readable
 per-query × per-backend wall times plus the backend's kernel-dispatch
 counters, so regressions in *where* intersections execute are visible,
-not just regressions in time.
+not just regressions in time.  Queries whose cost-based plan search
+(``core.plan_search``) picked a non-appearance-order plan are ALSO timed
+with ``REPRO_PLAN_SEARCH=off`` semantics, recording the wall-time win
+and result parity against the seed plan in the artifact.
 
 ``--smoke`` runs only the backend suite on tiny graphs (one repetition),
 for CI's bench-smoke lane. ``--only`` restricts the run to the matching
 table/figure module and skips the backend suite (unless the filter
 mentions "backend").
+
+Bench-regression gate (CI): ``--check-baseline benchmarks/baseline.json``
+compares the suite against the committed baseline — wall times within a
+generous ``--tolerance`` (default 3x plus a fixed absolute slack: smoke
+walls are sub-second and shared-runner throughput swings 2-3x, so the
+wall check only catches gross regressions; the EXACT dispatch-counter
+and parity comparison is the sharp, machine-independent half of the
+gate) — and exits nonzero on regression.  ``--write-baseline PATH`` refreshes the file.
 """
 from __future__ import annotations
 
@@ -22,6 +33,10 @@ import sys
 import time
 
 import numpy as np
+
+# absolute wall slack (seconds) under --check-baseline: smoke runs are
+# jit-compile dominated and tiny, so a pure ratio would flag noise
+BASELINE_ABS_SLACK_S = 0.25
 
 
 # ----------------------------------------------------- backend suite
@@ -58,6 +73,11 @@ def run_backend_suite(smoke: bool) -> list:
         eng.load_edges("Edge", src, g.neighbors)
         for al in ALIASES:
             eng.alias(al, "Edge")
+        # untimed process warmup: one throwaway query absorbs the
+        # per-process jax/XLA init so the FIRST suite entry's wall
+        # measures the query, not interpreter startup (matters for the
+        # --check-baseline gate, which compares absolute walls)
+        eng.query("Warm(;w:long) :- Edge(x,y); w=<<COUNT(*)>>.")
         for qname, q in paper_query_set(source=hub):
             walls = []
             res = None
@@ -78,7 +98,8 @@ def run_backend_suite(smoke: bool) -> list:
                             if v != before.get(k, 0)}
             digest = _result_digest(res)
             digests.setdefault(qname, digest)
-            out.append({
+            plan_md = eng.plan_metadata()
+            row = {
                 "query": qname,
                 "backend": backend,
                 "wall_s": min(walls),
@@ -90,9 +111,112 @@ def run_backend_suite(smoke: bool) -> list:
                 # order, per-level layout routing + threshold, estimated
                 # vs actual cardinalities — so plan-quality regressions
                 # are visible in the artifact, not just wall time.
-                "plan": eng.plan_metadata(),
-            })
+                "plan": plan_md,
+            }
+            # Cost-based search changed this query's plan: time BOTH modes
+            # warmed (one untimed execution each absorbs plan search,
+            # codegen and store builds — with reps=1 in --smoke the main
+            # wall is compile-contaminated, which would bias the
+            # comparison either way) and record the win + parity.
+            changed = any(r.get("plan_search", {}).get("order_changed")
+                          for r in plan_md)
+            if changed and eng.plan_search:
+                def one(mode_on):
+                    eng.plan_search = mode_on
+                    eng.bag_cache = BagResultCache()
+                    t0_ = time.perf_counter()
+                    res_ = eng.query(q)
+                    return time.perf_counter() - t0_, res_
+
+                ws = {False: [], True: []}
+                off_res = None
+                for mode in (False, True):     # warmup, untimed: absorbs
+                    one(mode)                  # plan search + codegen
+                for _ in range(max(reps, 2)):  # interleaved: machine-speed
+                    for mode in (False, True):  # drift hits both modes
+                        w, res_ = one(mode)
+                        ws[mode].append(w)
+                        if mode is False:
+                            off_res = res_
+                eng.plan_search = True
+                on_wall, off_wall = min(ws[True]), min(ws[False])
+                row["plan_search"] = {
+                    "order_changed": True,
+                    "wall_s_warm": on_wall,
+                    "baseline_wall_s": off_wall,
+                    "speedup_vs_off": off_wall / max(on_wall, 1e-9),
+                    "parity_vs_off": bool(np.isclose(
+                        digest, _result_digest(off_res),
+                        rtol=1e-5, atol=1e-6)),
+                }
+            out.append(row)
     return out
+
+
+# ------------------------------------------------- bench-regression gate
+def _gate_summary(suite: list) -> dict:
+    """The comparable slice of a suite run: wall + parity + EXACT dispatch
+    counters per query × backend."""
+    out = {}
+    for r in suite:
+        out[f"{r['query']}/{r['backend']}"] = {
+            "wall_s": float(r["wall_s"]),
+            "parity": bool(r["parity"]),
+            "dispatch": {k: int(v) for k, v in sorted(r["dispatch"].items())},
+        }
+    return out
+
+
+def write_baseline(suite: list, path: str, smoke: bool) -> None:
+    payload = {
+        "meta": {"smoke": bool(smoke), "unix_time": time.time(),
+                 "note": "refresh with: python -m benchmarks.run --smoke "
+                         "--write-baseline benchmarks/baseline.json"},
+        "queries": _gate_summary(suite),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote baseline {path} ({len(payload['queries'])} entries)")
+
+
+def check_baseline(suite: list, path: str, tolerance: float,
+                   smoke: bool) -> list:
+    """Compare ``suite`` against the committed baseline; returns the list
+    of human-readable violations (empty = gate passes)."""
+    with open(path) as f:
+        base = json.load(f)
+    cur = _gate_summary(suite)
+    failures = []
+    base_smoke = base.get("meta", {}).get("smoke")
+    if base_smoke is not None and bool(base_smoke) != bool(smoke):
+        return [f"baseline {path} was recorded with smoke={base_smoke} but "
+                f"this run has smoke={smoke} — walls/dispatch are not "
+                f"comparable across suite sizes"]
+    for key in sorted(set(cur) - set(base["queries"])):
+        failures.append(f"{key}: present in this run but not in the "
+                        f"baseline — refresh with --write-baseline to gate it")
+    for key, b in sorted(base["queries"].items()):
+        c = cur.get(key)
+        if c is None:
+            failures.append(f"{key}: present in baseline but not in this run")
+            continue
+        if not c["parity"]:
+            failures.append(f"{key}: cross-backend parity FAILED")
+        limit = b["wall_s"] * tolerance + BASELINE_ABS_SLACK_S
+        if c["wall_s"] > limit:
+            failures.append(
+                f"{key}: wall {c['wall_s']:.3f}s exceeds baseline "
+                f"{b['wall_s']:.3f}s * {tolerance:g} + "
+                f"{BASELINE_ABS_SLACK_S:g}s = {limit:.3f}s")
+        if c["dispatch"] != b["dispatch"]:
+            diff = sorted(set(c["dispatch"].items())
+                          ^ set(b["dispatch"].items()))
+            keys = sorted({k for k, _ in diff})
+            failures.append(
+                f"{key}: dispatch counters changed ({', '.join(keys)}) — "
+                f"if intended, refresh with --write-baseline")
+    return failures
 
 
 # ------------------------------------------------------------- driver
@@ -104,6 +228,14 @@ def main() -> None:
                     help="backend suite only, tiny graphs, 1 rep (CI lane)")
     ap.add_argument("--json", default="BENCH_results.json",
                     help="output path for the machine-readable results")
+    ap.add_argument("--check-baseline", default=None, metavar="PATH",
+                    help="compare the backend suite against a committed "
+                         "baseline; exit nonzero on regression")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write/refresh the bench baseline from this run")
+    ap.add_argument("--tolerance", type=float, default=3.0,
+                    help="wall-time regression tolerance factor for "
+                         "--check-baseline (default 3x)")
     args = ap.parse_args()
 
     module_rows = []
@@ -133,6 +265,10 @@ def main() -> None:
             print(f"# {name} finished in {time.monotonic() - t0:.1f}s")
 
     if args.only and not args.smoke and "backend" not in args.only:
+        if args.check_baseline or args.write_baseline:
+            print("# ERROR: --check-baseline/--write-baseline need the "
+                  "backend suite, which --only skips")
+            sys.exit(2)
         # a filtered single-module run: skip the cross-backend suite
         payload = {"meta": {"smoke": False, "argv": sys.argv[1:],
                             "unix_time": time.time()},
@@ -148,9 +284,14 @@ def main() -> None:
         top = sorted((k for k in row_["dispatch"]
                       if k.startswith("intersect.")),
                      key=lambda k: -row_["dispatch"][k])
+        extra = ""
+        ps = row_.get("plan_search")
+        if ps:
+            extra = (f"  # plan changed: {ps['speedup_vs_off']:.2f}x vs "
+                     f"search-off (parity={ps['parity_vs_off']})")
         print(f"{row_['query']},{row_['backend']},"
               f"{row_['wall_s'] * 1e3:.1f},{row_['parity']},"
-              f"{top[0] if top else '-'}")
+              f"{top[0] if top else '-'}{extra}")
 
     payload = {
         "meta": {"smoke": bool(args.smoke),
@@ -163,10 +304,26 @@ def main() -> None:
         json.dump(payload, f, indent=2)
     print(f"# wrote {args.json}")
 
+    # parity gates BEFORE the baseline is (re)written: a run with a
+    # cross-backend mismatch must never produce a reference file
     bad = [r for r in suite if not r["parity"]]
     if bad:
         print(f"# PARITY FAILURES: {[r['query'] for r in bad]}")
         sys.exit(1)
+
+    if args.write_baseline:
+        write_baseline(suite, args.write_baseline, args.smoke)
+
+    if args.check_baseline:
+        failures = check_baseline(suite, args.check_baseline,
+                                  args.tolerance, args.smoke)
+        if failures:
+            print("# BENCH BASELINE REGRESSIONS:")
+            for fail in failures:
+                print(f"#   {fail}")
+            sys.exit(1)
+        print(f"# baseline check OK ({args.check_baseline}, "
+              f"tolerance {args.tolerance:g}x)")
 
 
 if __name__ == "__main__":

@@ -114,6 +114,18 @@ class ExecBackend:
         self.stats["fold.pair_count_calls"] += 1
         return store.intersect_count(u, v)
 
+    def pair_materialize(self, trie, u: np.ndarray, v: np.ndarray,
+                         threshold: Optional[float] = None):
+        """Binary MATERIALIZING extension fast path (the plan IR's
+        ``Extend.routing == "pair_store"``): cohort-routed
+        ``N(u_i) ∩ N(v_i)`` with positions for trie descent, or ``None``
+        when the layout store is bypassed."""
+        store = self._pair_store(trie, threshold)
+        if store is None:
+            return None
+        self.stats["extend.pair_materialize_calls"] += 1
+        return store.intersect_materialize(u, v)
+
     def dispatch_summary(self) -> Dict[str, int]:
         return dict(self.stats)
 

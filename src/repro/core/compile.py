@@ -118,21 +118,37 @@ class QueryPlan:
         return "\n".join(lines)
 
 
-def compile_rule(rule: Rule, use_ghd: bool = True) -> QueryPlan:
-    """Compile one (non-recursive) rule body into a GHD query plan."""
+def compile_rule(rule: Rule, use_ghd: bool = True,
+                 ghd: Optional[GHD] = None,
+                 order: Optional[Sequence[str]] = None) -> QueryPlan:
+    """Compile one (non-recursive) rule body into a GHD query plan.
+
+    ``ghd`` / ``order`` inject a candidate decomposition / global
+    attribute order instead of the defaults (min-fhw ``ghd.decompose`` /
+    appearance-order ``ghd.attribute_order``) — the entry point of the
+    cost-based plan search (``core.plan_search``), which compiles each
+    (GHD, order) candidate through this same function so candidates are
+    real plans, not approximations of one.
+    """
     atoms = [PlanAtom.from_atom(i, a) for i, a in enumerate(rule.body)]
-    hg = Hypergraph.from_rule(rule)
+    hg = ghd.hypergraph if ghd is not None else Hypergraph.from_rule(rule)
     output_vars = tuple(rule.head.keyvars)
 
     agg = rule.agg
     semiring = AGG_TO_SEMIRING[agg.op] if agg is not None else None
     agg_arg = agg.arg if agg is not None else None
 
-    if use_ghd:
+    if ghd is not None:
+        g = ghd
+    elif use_ghd:
         g = ghd_mod.decompose(hg, output_vars)
     else:
         g = ghd_mod.single_bag(hg)
-    order = ghd_mod.attribute_order(g, output_vars)
+    if order is not None:
+        order = tuple(order)
+        assert set(order) == set(hg.vertices), (order, hg.vertices)
+    else:
+        order = ghd_mod.attribute_order(g, output_vars)
 
     out_set = set(output_vars)
     by_edge = {a.idx: a for a in atoms}

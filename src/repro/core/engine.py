@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core import codegen as codegen_mod
 from repro.core import plan_ir
+from repro.core import plan_search as plan_search_mod
 from repro.core.backend import ExecBackend, make_backend
 from repro.core.compile import QueryPlan, compile_rule
 from repro.core.datalog import AggRef, Rule, eval_expr, parse
@@ -78,12 +79,17 @@ class Engine:
     """Public API: load relations, run datalog programs."""
 
     def __init__(self, use_ghd: bool = True, use_codegen: bool = True,
-                 backend=None):
+                 backend=None, plan_search: Optional[bool] = None):
         self.catalog = Catalog()
         self.use_ghd = use_ghd
         self.use_codegen = use_codegen
         # backend: ExecBackend | "numpy" | "device" | None (env-resolved)
         self.backend: ExecBackend = make_backend(backend)
+        # cost-based GHD + attribute-order search (core.plan_search); None
+        # defers to REPRO_PLAN_SEARCH (default on, "off" = the seed
+        # appearance-order plan, kept as the differential-testing oracle)
+        self.plan_search = (plan_search_mod.enabled_by_env()
+                            if plan_search is None else bool(plan_search))
         self.dictionary: Dict[object, int] = {}
         self.last_plan: Optional[QueryPlan] = None
         self.last_physical: Optional[plan_ir.PhysicalPlan] = None
@@ -92,6 +98,12 @@ class Engine:
         # the paper excludes compilation from query timing — repeated
         # queries reuse the compiled plan
         self._plan_cache: Dict[Tuple[str, bool], QueryPlan] = {}
+        # plan-SEARCH decision cache: the chosen (GHD, order) per rule.
+        # The choice is made once per engine from the statistics at first
+        # execution; later rounds (recursion bumps catalog versions every
+        # iteration) re-annotate the SAME chosen plan against fresh
+        # statistics instead of re-running the whole candidate search.
+        self._search_cache: Dict[Tuple, Tuple] = {}
         # physical-plan (+ emitted codegen) cache, keyed additionally on
         # catalog versions: re-plans when the data a rule reads changes
         self._physical_cache: Dict[Tuple, Tuple] = {}
@@ -174,8 +186,11 @@ class Engine:
     def plan_metadata(self) -> List[dict]:
         """Optimizer choices of the last ``query()`` call: one record per
         executed rule — fhw, attribute order, per-operator estimated vs
-        actual cardinalities, terminal-fold routing and layout thresholds.
-        Written into the benchmark artifact by ``benchmarks/run.py``."""
+        actual cardinalities (plus the geometric-mean q-error scorecard in
+        ``est_error``), terminal-fold routing and layout thresholds, and
+        the cost-based search verdict in ``plan_search`` (candidates
+        considered, chosen vs baseline cost/order). Written into the
+        benchmark artifact by ``benchmarks/run.py``."""
         return list(self._program_metadata)
 
     # ------------------------------------------------------------ internals
@@ -192,30 +207,54 @@ class Engine:
 
     def _physical(self, plan: QueryPlan):
         """Physical plan (+ emitted source) for ``plan`` against the
-        CURRENT catalog contents. Cached on (rule, use_ghd, catalog
-        versions of the body relations): statistics, cardinality
+        CURRENT catalog contents. Cached on (rule, use_ghd, plan_search,
+        catalog versions of the body relations): statistics, cardinality
         estimates, and layout thresholds are pure functions of the data
         versions, so repeated executions — the paper's repeated-query
         protocol — skip the planner and the codegen exec entirely, while
         any reload (or a recursion round rebuilding its delta)
-        re-plans against fresh statistics."""
+        re-plans against fresh statistics.
+
+        With the cost-based plan search on, the first execution of a rule
+        runs the full candidate search (``core.plan_search``); the chosen
+        logical plan is pinned in ``_search_cache`` so later rounds only
+        re-annotate it."""
         rels = tuple(sorted({a.rel for a in plan.rule.body}))
         key = (repr(plan.rule), self.use_ghd, self.use_codegen,
-               self.catalog.version_key(rels))
+               self.plan_search, self.catalog.version_key(rels))
         hit = self._physical_cache.get(key)
         if hit is None:
-            pplan = plan_ir.build_physical_plan(plan, self.stats_catalog,
-                                                self.catalog)
+            search_md = None
+            if self.plan_search:
+                dkey = (repr(plan.rule), self.use_ghd)
+                decided = self._search_cache.get(dkey)
+                if decided is None:
+                    sr = plan_search_mod.search(
+                        plan, self.stats_catalog, self.catalog,
+                        bag_cache=self.bag_cache, use_ghd=self.use_ghd)
+                    decided = (sr.chosen, sr.metadata())
+                    if len(self._search_cache) >= 256:
+                        self._search_cache.pop(
+                            next(iter(self._search_cache)))
+                    self._search_cache[dkey] = decided
+                    pplan = sr.physical
+                else:
+                    pplan = plan_ir.build_physical_plan(
+                        decided[0], self.stats_catalog, self.catalog)
+                search_md = decided[1]
+            else:
+                pplan = plan_ir.build_physical_plan(plan, self.stats_catalog,
+                                                    self.catalog)
             fn = src = None
             if self.use_codegen:
                 fn, src = codegen_mod.emit(pplan)
             if len(self._physical_cache) >= 256:
                 self._physical_cache.pop(next(iter(self._physical_cache)))
-            hit = self._physical_cache[key] = (pplan, fn, src)
+            hit = self._physical_cache[key] = (pplan, fn, src, search_md)
         return hit
 
     def _execute(self, plan: QueryPlan) -> GJResult:
-        pplan, fn, src = self._physical(plan)
+        pplan, fn, src, search_md = self._physical(plan)
         self.last_physical = pplan
         metrics: Dict[int, dict] = {}
         if self.use_codegen:
@@ -239,6 +278,9 @@ class Engine:
             for step in bag["steps"]:
                 if step["var"] in actuals:
                     step["actual_rows"] = int(actuals[step["var"]])
+        md["plan_search"] = (search_md if search_md is not None
+                             else {"enabled": False})
+        md["est_error"] = _est_error(md["bags"])
         self._program_metadata.append(md)
         return res
 
@@ -394,6 +436,23 @@ class Engine:
         if delta_name in self.catalog.tries:
             del self.catalog.tries[delta_name]
         return QueryResult(keyvars, {keyvars[0]: keys.astype(np.int32)}, ann)
+
+
+def _est_error(bags: List[dict]) -> dict:
+    """Optimizer scorecard: geometric-mean q-error (max(est,act)/min, >=1)
+    of the per-bag cardinality estimates against the recorded actuals."""
+    qs = []
+    for bag in bags:
+        actual = bag.get("actual_rows")
+        if actual is None:
+            continue
+        est = max(float(bag["est_rows"]), 1.0)
+        act = max(float(actual), 1.0)
+        qs.append(max(est, act) / min(est, act))
+    if not qs:
+        return {"n_bags": 0, "geo_mean_q": None}
+    return {"n_bags": len(qs),
+            "geo_mean_q": float(np.exp(np.mean(np.log(qs))))}
 
 
 def rule_without_star(rule: Rule) -> Rule:

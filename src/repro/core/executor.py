@@ -135,6 +135,12 @@ class BagResultCache:
             self.hits += 1
         return res
 
+    def contains(self, key: Tuple) -> bool:
+        """Peek WITHOUT touching the hit/miss counters — the plan search
+        costs cached bags at zero but must not distort the instrumentation
+        the benchmarks assert on."""
+        return key in self._data
+
     def put(self, key: Tuple, res: GJResult):
         if len(self._data) >= self.maxsize:
             self._data.pop(next(iter(self._data)))

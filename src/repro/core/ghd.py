@@ -142,24 +142,15 @@ def _mst_rip_tree(chis: List[FrozenSet[str]]):
 
 
 # ------------------------------------------------------------------- search
-def decompose(hg: Hypergraph,
-              output_vars: Sequence[str] = (),
-              max_partitions: int = 200_000) -> GHD:
-    """Enumerate edge-partition GHDs; return one of minimum width.
-
-    Tie-breaking (paper Section 3.2 + Example 3.1 behaviour):
-      1. smallest width  (the theoretical guarantee),
-      2. smallest sum of bag widths (prefer splitting a wide query into
-         cheap bags -> early aggregation does more work),
-      3. fewest bags (cheaper Yannakakis passes),
-      4. root covers the output attributes if possible (lets the planner
-         elide the top-down pass, Appendix A.1).
-    """
+def _iter_valid_partitions(hg: Hypergraph, max_partitions: int,
+                           state: Dict[str, bool]):
+    """Stream RIP-valid edge partitions as ``(partition, chis, parent,
+    widths)``; sets ``state["truncated"]`` when the budget runs out. The
+    budget counts EVERY partition visited (valid or not), exactly as the
+    original best-so-far loop did. Streaming keeps ``decompose()`` at
+    O(1) memory — only ``decompose_candidates`` materializes the list."""
     E = len(hg.edges)
     assert E >= 1
-    out_set = frozenset(output_vars)
-    best_key, best = None, None
-    n_seen = 0
     width_cache: Dict[Tuple[int, ...], float] = {}
 
     def bag_width(group: Tuple[int, ...]) -> float:
@@ -168,48 +159,127 @@ def decompose(hg: Hypergraph,
             width_cache[key] = fractional_cover_number(hg, key)
         return width_cache[key]
 
-    truncated = False
+    n_seen = 0
     for partition in _set_partitions(range(E)):
         n_seen += 1
         if n_seen > max_partitions:
-            # Best-so-far is returned, but silently truncating hid plan
-            # quality regressions: record it on the GHD and warn.
-            truncated = True
-            break
+            state["truncated"] = True
+            return
         chis = [frozenset(hg.edge_vars(g)) for g in partition]
         parent, ok = _mst_rip_tree(chis)
         if not ok:
             continue
         widths = [bag_width(g) for g in partition]
-        width = max(widths)
-        # Root at a bag covering the output vars (elides the top-down pass,
-        # Appendix A.1); among covering bags prefer the *narrowest* — this
-        # tends to center the tree on connector bags (e.g. U in Barbell),
-        # making symmetric sub-queries siblings so the equivalent-bag
-        # elimination of Appendix A.1 can fire.
-        root_idx = 0
-        covers_out = False
-        cands = [(widths[i], i) for i, chi in enumerate(chis) if out_set <= chi]
-        if cands:
-            covers_out = True
-            root_idx = min(cands)[1]
-        key = (round(width, 9), round(sum(widths), 9), len(partition),
-               0 if covers_out else 1)
+        yield partition, chis, parent, widths
+
+
+def _seed_root(chis, widths, out_set):
+    """The decompose() root tie-break: a bag covering the output vars
+    (elides the top-down pass, Appendix A.1); among covering bags prefer
+    the *narrowest* — this tends to center the tree on connector bags
+    (e.g. U in Barbell), making symmetric sub-queries siblings so the
+    equivalent-bag elimination of Appendix A.1 can fire."""
+    cands = [(widths[i], i) for i, chi in enumerate(chis) if out_set <= chi]
+    if cands:
+        return min(cands)[1], True
+    return 0, False
+
+
+def _partition_key(partition, chis, widths, out_set):
+    """Tie-breaking (paper Section 3.2 + Example 3.1 behaviour):
+      1. smallest width  (the theoretical guarantee),
+      2. smallest sum of bag widths (prefer splitting a wide query into
+         cheap bags -> early aggregation does more work),
+      3. fewest bags (cheaper Yannakakis passes),
+      4. root covers the output attributes if possible (lets the planner
+         elide the top-down pass, Appendix A.1).
+    """
+    _root, covers_out = _seed_root(chis, widths, out_set)
+    return (round(max(widths), 9), round(sum(widths), 9), len(partition),
+            0 if covers_out else 1)
+
+
+def decompose(hg: Hypergraph,
+              output_vars: Sequence[str] = (),
+              max_partitions: int = 200_000) -> GHD:
+    """Enumerate edge-partition GHDs; return one of minimum width
+    (tie-break: `_partition_key`, root: `_seed_root`)."""
+    out_set = frozenset(output_vars)
+    state = {"truncated": False}
+    best_key, best = None, None
+    for partition, chis, parent, widths in \
+            _iter_valid_partitions(hg, max_partitions, state):
+        key = _partition_key(partition, chis, widths, out_set)
         if best_key is None or key < best_key:
             best_key = key
-            best = (partition, chis, parent, widths, root_idx)
+            best = (partition, chis, parent, widths,
+                    _seed_root(chis, widths, out_set)[0])
 
     assert best is not None, "no GHD found (disconnected RIP failure?)"
+    truncated = state["truncated"]
     if truncated:
+        # Best-so-far is returned, but silently truncating hid plan
+        # quality regressions: record it on the GHD and warn.
         warnings.warn(
             f"GHD search truncated at max_partitions={max_partitions} "
-            f"({E} hyperedges): returning the best decomposition seen so "
-            f"far (width {best_key[0]:.3g}); plan may be suboptimal",
+            f"({len(hg.edges)} hyperedges): returning the best "
+            f"decomposition seen so far (width {best_key[0]:.3g}); plan "
+            f"may be suboptimal",
             RuntimeWarning, stacklevel=2)
     partition, chis, parent, widths, root_idx = best
     g = _build_tree(hg, partition, chis, parent, widths, root_idx)
     g.search_exhausted = truncated
     return g
+
+
+def decompose_candidates(hg: Hypergraph,
+                         output_vars: Sequence[str] = (),
+                         k: int = 4,
+                         max_roots: int = 4,
+                         max_partitions: int = 200_000) -> List[GHD]:
+    """Candidate GHDs for the cost-based plan search.
+
+    Emits only MINIMUM-width partitions (the paper's hard constraint:
+    "it is key that the optimizer selects a GHD with the smallest value
+    of w", Section 3.2) — the top ``k`` of them by the ``decompose()``
+    tie-break key — and, per partition, up to ``max_roots`` rootings
+    (the seed root first, then other output-covering bags by width; for
+    listing queries whose outputs no bag covers, any bag may root the
+    tree and the top-down pass reassembles the result).
+
+    The FIRST returned GHD is exactly ``decompose()``'s choice, so a
+    cost model that breaks ties toward earlier candidates reproduces the
+    seed plan when costs tie.
+    """
+    out_set = frozenset(output_vars)
+    state = {"truncated": False}
+    valid = list(_iter_valid_partitions(hg, max_partitions, state))
+    truncated = state["truncated"]
+    assert valid, "no GHD found (disconnected RIP failure?)"
+    keyed = sorted(
+        ((_partition_key(p, chis, widths, out_set), p, chis, parent, widths)
+         for p, chis, parent, widths in valid),
+        key=lambda t: t[0])
+    min_width = keyed[0][0][0]
+    keyed = [t for t in keyed if t[0][0] == min_width][:max(1, k)]
+
+    ghds: List[GHD] = []
+    for _key, partition, chis, parent, widths in keyed:
+        seed_root, covers = _seed_root(chis, widths, out_set)
+        roots = [seed_root]
+        if covers:
+            alt = sorted((widths[i], i) for i, chi in enumerate(chis)
+                         if out_set <= chi)
+        else:
+            alt = sorted((widths[i], i) for i in range(len(chis)))
+        for _w, i in alt:
+            if i not in roots and len(roots) < max(1, max_roots):
+                roots.append(i)
+        for r in roots:
+            g = _build_tree(hg, partition, chis, parent, widths, r)
+            g.search_exhausted = truncated
+            ghds.append(g)
+    return ghds
 
 
 def _build_tree(hg, partition, chis, parent, widths, root_idx) -> GHD:
@@ -282,6 +352,57 @@ def attribute_order(ghd: GHD, output_vars: Sequence[str] = ()) -> Tuple[str, ...
 
     visit(ghd.root)
     return tuple(order)
+
+
+def candidate_orders(ghd: GHD, output_vars: Sequence[str] = (),
+                     max_group: int = 4, limit: int = 64) -> List[Tuple[str, ...]]:
+    """Candidate global attribute orders compatible with ``ghd``.
+
+    Every candidate keeps the structural invariants of
+    :func:`attribute_order` — pre-order over bags, shared-with-parent
+    attributes inherited from the ancestor that introduced them, output
+    attributes before aggregated-away attributes within a bag (so
+    terminal folds stay terminal) — but permutes WITHIN each bag's
+    output group and rest group, which is exactly the degree of freedom
+    the appearance-order tie-break fixes arbitrarily.
+
+    The FIRST order returned is exactly ``attribute_order(ghd,
+    output_vars)``; groups larger than ``max_group`` attributes keep
+    only their appearance order (bounding the product), and at most
+    ``limit`` orders are emitted overall.
+    """
+    out_set = set(output_vars)
+    appear = {v: i for i, v in enumerate(ghd.hypergraph.vertices)}
+
+    def by_appearance(vs):
+        return sorted(vs, key=lambda v: appear.get(v, 1 << 30))
+
+    per_bag: List[List[Tuple[str, ...]]] = []
+    for bag in ghd.root.walk():
+        shared = set(bag.shared_with_parent)
+        outs = by_appearance(v for v in bag.attrs
+                             if v in out_set and v not in shared)
+        rest = by_appearance(v for v in bag.attrs
+                             if v not in out_set and v not in shared)
+        outs_opts = ([tuple(outs)] if not 1 < len(outs) <= max_group
+                     else [tuple(p) for p in itertools.permutations(outs)])
+        rest_opts = ([tuple(rest)] if not 1 < len(rest) <= max_group
+                     else [tuple(p) for p in itertools.permutations(rest)])
+        per_bag.append([o + r for o in outs_opts for r in rest_opts])
+
+    orders: List[Tuple[str, ...]] = []
+    for combo in itertools.islice(itertools.product(*per_bag), max(1, limit)):
+        order: List[str] = []
+        seen = set()
+        for seq in combo:
+            for v in seq:
+                if v not in seen:
+                    seen.add(v)
+                    order.append(v)
+        order = tuple(order)
+        if order not in orders:
+            orders.append(order)
+    return orders
 
 
 def single_bag(hg: Hypergraph) -> GHD:

@@ -41,9 +41,15 @@ from repro.core.semiring import COUNT, Semiring
 from repro.core.trie import Trie
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class BoundAtom:
-    """One relation occurrence in a bag, with live trie-descent state."""
+    """One relation occurrence in a bag, with live trie-descent state.
+
+    ``eq=False``: atoms are identity-keyed live state. The generated
+    dataclass equality deep-compared tries (numpy arrays -> ambiguous
+    truth value) the moment one bag held two structurally identical
+    child-bag inputs — e.g. ``R(v1,v0),S(v2,v0)`` decomposed into two
+    single-atom bags both passing up ``(v0,)``."""
 
     trie: Trie
     vars: Tuple[str, ...]       # variables per attribute (post-selection)
@@ -253,17 +259,55 @@ class GenericJoin:
     def _extend(self, cons: List[BoundAtom], F: int):
         """Intersect candidates of ``cons`` per frontier row; materialize.
 
-        Gathers each atom's per-row candidate bounds, orders by total
-        candidate mass (the min-property seed first) and hands the whole
-        extension to the backend — which expands the seed and probes every
-        other atom (NumpyBackend: one search per atom; DeviceBackend: one
-        fused device call for all atoms)."""
+        When the plan IR routed this extension to the layout store
+        (``BagHints.extend_routing``), the binary self-join expansion is
+        served cohort-routed by ``HybridSetStore.intersect_materialize``
+        (bitset extraction for dense pairs). Otherwise: gathers each
+        atom's per-row candidate bounds, orders by total candidate mass
+        (the min-property seed first) and hands the whole extension to
+        the backend — which expands the seed and probes every other atom
+        (NumpyBackend: one search per atom; DeviceBackend: one fused
+        device call for all atoms)."""
+        routed = self._extend_pair_store(cons, F)
+        if routed is not None:
+            return routed
         infos = []
         for a in cons:
             values, lo, hi = a.candidate_bounds(F)
             infos.append((a, values, lo, hi, int((hi - lo).sum())))
         infos.sort(key=lambda t: t[4])
         return self.backend.extend(infos, F)
+
+    def _extend_pair_store(self, cons: List[BoundAtom], F: int):
+        """Layout-store fast path for a materializing binary self-join
+        extension — applies only where the plan IR said so (hint), with
+        the same runtime guards as the terminal-fold pair path.  Two
+        hints route here: ``extend_routing`` for retained attributes, and
+        ``terminal_routing == "pair_kernel"`` for the materialize inside
+        an ANNOTATED terminal fold (which cannot take the count kernels
+        but still profits from the cohort-routed expansion)."""
+        h = self.hints
+        if h is None or len(cons) != 2:
+            return None
+        a, b = cons
+        routed = ((h.extend_routing or {}).get(a.next_var()) == "pair_store"
+                  or h.terminal_routing == "pair_kernel")
+        if not routed:
+            return None
+        thr = h.layout_threshold
+        if (a.trie is not b.trie or a.trie.arity != 2
+                or a.depth != 1 or b.depth != 1
+                or a.cursor is None or b.cursor is None
+                or not self.backend.has_pair_store(a.trie, threshold=thr)):
+            return None
+        u = a.trie.levels[0].values[a.cursor].astype(np.int64)
+        v = b.trie.levels[0].values[b.cursor].astype(np.int64)
+        out = self.backend.pair_materialize(a.trie, u, v, threshold=thr)
+        if out is None:
+            return None
+        row_id, vals, pos_u, pos_v = out
+        return row_id, np.asarray(vals, dtype=np.int32), \
+            {id(a): pos_u, id(b): pos_v}
 
     def _terminal_fold(self, cons: List[BoundAtom], F: int):
         """Fold the last attribute without materializing the expansion.

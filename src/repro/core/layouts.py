@@ -273,12 +273,48 @@ class HybridSetStore:
                                       u, v)
 
     def intersect_materialize(self, u: np.ndarray, v: np.ndarray):
-        """Materializing intersection (pair_id, value). Used for non-terminal
-        attributes where the engine must descend further. Falls back to the
-        uint path for all cohorts (positions are needed for trie descent; the
-        bitset layout's `index` field supports it but the uint path is used
-        for correctness-primary materialization)."""
-        pair_id, vals, _, _ = I.intersect_pairs_uint(
-            self.csr.offsets, self.csr.neighbors,
-            np.asarray(u, np.int64), np.asarray(v, np.int64))
-        return pair_id, vals
+        """Materializing intersection, cohort-routed like ``intersect_count``.
+
+        Returns ``(pair_id, value, pos_u, pos_v)`` — positions are absolute
+        indices into ``csr.neighbors`` (= the trie's set-level values, for
+        descent into deeper levels / annotation gathers).  Dense×dense
+        pairs extract matches from the blocked-bitset layout, recovering
+        positions via the per-block ``index`` field (paper Figure 6 — the
+        seed ALWAYS fell back to the uint search here, leaving the hint
+        unused); every other cohort takes the uint search path.  Pair
+        counts land in the dispatch counters as
+        ``intersect.materialize_{bitset,uint}``.
+        """
+        u = np.asarray(u, np.int64)
+        v = np.asarray(v, np.int64)
+        if self.bitset is None:
+            self._bump("intersect.materialize_uint", len(u))
+            return I.intersect_pairs_uint(self.csr.offsets,
+                                          self.csr.neighbors, u, v)
+        slot = self.bitset.slot_of
+        both_dense = (slot[u] >= 0) & (slot[v] >= 0)
+        if both_dense.all():
+            self._bump("intersect.materialize_bitset", len(u))
+            pid, vals, ra, rb = I.bitset_intersect_materialize(
+                self.bitset, slot[u], slot[v])
+            return (pid, vals,
+                    self.csr.offsets[u[pid]] + ra,
+                    self.csr.offsets[v[pid]] + rb)
+        di = np.flatnonzero(both_dense)
+        si = np.flatnonzero(~both_dense)
+        self._bump("intersect.materialize_bitset", len(di))
+        self._bump("intersect.materialize_uint", len(si))
+        pid_d, vals_d, ra, rb = I.bitset_intersect_materialize(
+            self.bitset, slot[u[di]], slot[v[di]])
+        pos_u_d = self.csr.offsets[u[di][pid_d]] + ra
+        pos_v_d = self.csr.offsets[v[di][pid_d]] + rb
+        pid_s, vals_s, pu_s, pv_s = I.intersect_pairs_uint(
+            self.csr.offsets, self.csr.neighbors, u[si], v[si])
+        pair_id = np.concatenate([di[pid_d], si[pid_s]])
+        vals = np.concatenate([vals_d, vals_s])
+        pos_u = np.concatenate([pos_u_d, pu_s])
+        pos_v = np.concatenate([pos_v_d, pv_s])
+        # restore the canonical expansion order (pair-major, values
+        # ascending within a pair) the search path produces
+        order = np.lexsort((vals, pair_id))
+        return pair_id[order], vals[order], pos_u[order], pos_v[order]

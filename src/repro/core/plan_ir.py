@@ -86,6 +86,9 @@ class ChildInput:
 class PlanOp:
     op_id: int
     est_rows: float             # estimated cardinality after this operator
+    cost: float                 # modelled work of this operator (the
+    #                             plan-search objective; statistics.py
+    #                             cost-model weights, summed by plan_cost)
 
 
 @dataclasses.dataclass
@@ -100,6 +103,10 @@ class Extend(PlanOp):
     var: str
     n_constraining: int
     est_fanout: float
+    # "pair_store" when this materializing extension is a binary self-join
+    # the HybridSetStore can serve cohort-routed (bitset extraction for
+    # dense pairs); "search" keeps the generic expand-and-probe path.
+    routing: str = "search"
 
 
 @dataclasses.dataclass
@@ -133,6 +140,9 @@ class BagHints:
     layout_threshold: Optional[float] = None
     terminal_routing: Optional[str] = None
     est_rows: Optional[float] = None
+    # var -> "pair_store" for materializing extensions routed through the
+    # layout store (None/missing var = generic search path)
+    extend_routing: Optional[Dict[str, str]] = None
 
 
 @dataclasses.dataclass
@@ -147,12 +157,16 @@ class BagOps:
     def hints(self) -> BagHints:
         thr = None
         routing = None
+        ext_routing = {}
         for s in self.steps:
             if isinstance(s, TerminalFold):
                 thr = s.layout_threshold
                 routing = s.routing
+            elif isinstance(s, Extend) and s.routing != "search":
+                ext_routing[s.var] = s.routing
         return BagHints(layout_threshold=thr, terminal_routing=routing,
-                        est_rows=self.materialize.est_rows)
+                        est_rows=self.materialize.est_rows,
+                        extend_routing=ext_routing or None)
 
 
 @dataclasses.dataclass
@@ -199,11 +213,14 @@ class PhysicalPlan:
                 if isinstance(s, Extend):
                     steps.append({"op": "extend", "var": s.var,
                                   "est_fanout": float(s.est_fanout),
-                                  "est_rows": float(s.est_rows)})
+                                  "est_rows": float(s.est_rows),
+                                  "routing": s.routing,
+                                  "cost": float(s.cost)})
                 else:
                     steps.append({"op": "terminal_fold", "var": s.var,
                                   "semiring": s.semiring,
                                   "routing": s.routing,
+                                  "cost": float(s.cost),
                                   "layout_threshold":
                                       float(s.layout_threshold)
                                       if s.layout_threshold is not None
@@ -215,6 +232,8 @@ class PhysicalPlan:
                 "var_order": list(b.scan.var_order),
                 "output_vars": list(b.materialize.output_vars),
                 "est_rows": float(b.materialize.est_rows),
+                "cost": float(b.scan.cost + sum(s.cost for s in b.steps)
+                              + b.materialize.cost),
                 "steps": steps,
             })
         return {
@@ -226,6 +245,7 @@ class PhysicalPlan:
             "search_exhausted": bool(getattr(plan.ghd, "search_exhausted",
                                              False)),
             "num_bags": len(self.bag_ops),
+            "est_cost": float(plan_cost(self)),
             "top_down_inputs": (list(map(int, self.final.inputs))
                                 if self.final is not None else []),
             "bags": bags,
@@ -234,13 +254,18 @@ class PhysicalPlan:
 
 # ----------------------------------------------------------------- builder
 def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
-                        catalog) -> PhysicalPlan:
+                        catalog, agm_memo: Optional[Dict] = None
+                        ) -> PhysicalPlan:
     """Annotate the logical GHD plan into the physical operator DAG.
 
     ``catalog`` is the executor's relation catalog — the builder resolves
     each atom's reordered trie through it (the same identity-cached trie
-    the lowering will run on) to profile real data.
+    the lowering will run on) to profile real data.  ``agm_memo`` (an
+    optional dict) memoizes the per-bag fractional-cover LPs across
+    candidate lowerings of the SAME rule — the plan search lowers dozens
+    of candidates whose bags repeat.
     """
+    from repro.core import statistics as S
     aggregate = plan.semiring is not None
     counter = [0]
     ops: Dict[int, PlanOp] = {}
@@ -275,18 +300,21 @@ def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
             child_inputs.append(ChildInput(cb.materialize.op_id, shared))
         child_inputs = tuple(child_inputs)
 
-        scan = reg(BagScan(new_id(), 1.0, accesses, child_inputs,
+        scan = reg(BagScan(new_id(), 1.0, 0.0, accesses, child_inputs,
                            bp.var_order))
 
-        agm_cap = _bag_agm_bound(plan, bp, catalog)
+        agm_cap = _bag_agm_bound(plan, bp, catalog, agm_memo)
         steps: List[PlanOp] = []
         frontier = 1.0
+        rows_into_last = 1.0      # frontier entering the final step
+        out_domain = 1.0          # product of output-var value universes
+        out_domain_known = True
         # live descent state mirrored from GenericJoin: per-input depth
         depth = {i: len(acc.selections) for i, acc in enumerate(accesses)}
         cdepth = {i: 0 for i in range(len(child_inputs))}
         out_set = set(bp.output_vars)
         for vi, v in enumerate(bp.var_order):
-            cons: List[Tuple[Optional[TrieStats], int, float]] = []
+            cons: List[Tuple] = []
             advancing_atoms, advancing_children = [], []
             for i, acc in enumerate(accesses):
                 live = acc.live_vars
@@ -297,9 +325,16 @@ def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
             for i, ci in enumerate(child_inputs):
                 if cdepth[i] < len(ci.vars) and ci.vars[cdepth[i]] == v:
                     child_est = ops[ci.op_id].est_rows
-                    cons.append((None, cdepth[i], child_est))
+                    cons.append((None, cdepth[i], child_est, len(ci.vars)))
                     advancing_children.append(i)
-            fanout = stats.extension_estimate(cons)
+            fanout, min_cand, max_cand, universe = \
+                stats.extension_profile(cons)
+            if v in out_set:
+                if any(c[0] is not None for c in cons):
+                    out_domain *= universe
+                else:
+                    out_domain_known = False
+            rows_into_last = frontier
             frontier = max(frontier * fanout, 1e-9)
             if agm_cap is not None:
                 frontier = min(frontier, agm_cap)
@@ -309,21 +344,60 @@ def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
                 routing, thr = _terminal_routing(
                     accesses, advancing_atoms, advancing_children,
                     atom_tries, atom_stats, depth, stats)
+                set_stats = None
+                if advancing_atoms:
+                    st = atom_stats[advancing_atoms[0]]
+                    if st is not None and st.levels:
+                        set_stats = st.levels[-1]
+                cost = S.fold_cost(rows_into_last, min_cand, max_cand,
+                                   len(cons), routing, set_stats, thr,
+                                   stats.block_bits)
                 steps.append(reg(TerminalFold(
-                    new_id(), frontier, v, plan.semiring.name, routing, thr)))
+                    new_id(), frontier, cost, v, plan.semiring.name,
+                    routing, thr)))
             else:
-                steps.append(reg(Extend(new_id(), frontier, v, len(cons),
-                                        fanout)))
+                ext_routing = _extend_routing(
+                    accesses, advancing_atoms, advancing_children,
+                    atom_tries, depth)
+                cost = S.extension_cost(rows_into_last, min_cand, max_cand,
+                                        len(cons))
+                steps.append(reg(Extend(new_id(), frontier, cost, v,
+                                        len(cons), fanout, ext_routing)))
             for i in advancing_atoms:
                 depth[i] += 1
             for i in advancing_children:
                 cdepth[i] += 1
 
-        est_out = frontier
+        # a terminal fold never expands the frontier (it folds the
+        # expansion away; support can only shrink rows), so the bag's
+        # output estimate is the frontier ENTERING the fold — using the
+        # post-fanout value inflated est_rows by the folded attribute's
+        # fanout, which the plan search would propagate into the parent
+        # bag's candidate model
+        est_out = (rows_into_last
+                   if steps and isinstance(steps[-1], TerminalFold)
+                   else frontier)
         if agm_cap is not None:
             est_out = min(est_out, agm_cap)
+        # a bag's output cannot exceed the product of its retained
+        # attributes' value universes (distinct-value cap — without it,
+        # AGM-inflated intermediate estimates leak into the parent bag's
+        # candidate model and distort the plan search)
+        if bp.output_vars and out_domain_known:
+            est_out = min(est_out, out_domain)
+        # projection shape at the bag's end: the frontier holds every
+        # extended (non-folded) attribute; extras force a sort-based
+        # group-by, scalar aggregates a segment reduce.
+        extended = [s.var for s in steps if isinstance(s, Extend)]
+        proj_rows = (rows_into_last
+                     if steps and isinstance(steps[-1], TerminalFold)
+                     else frontier)
+        has_extra = bool(bp.output_vars) and bool(
+            set(extended) - set(bp.output_vars))
+        scalar_out = aggregate and not bp.output_vars
+        proj_cost = S.projection_cost(proj_rows, has_extra, scalar_out)
         mat = reg(MaterializeShared(
-            new_id(), est_out, scan.op_id, bp.output_vars,
+            new_id(), est_out, proj_cost, scan.op_id, bp.output_vars,
             keep_annotation=aggregate,
             reuse_struct=_resolved_struct(bp.dedup_key, catalog.resolve),
             reuse_rels=tuple(sorted({catalog.resolve(r)
@@ -346,13 +420,44 @@ def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
                 in_vars |= set(b.materialize.output_vars)
         var_order = tuple(v for v in plan.order if v in in_vars)
         est = max((ops[i].est_rows for i in inputs), default=1.0)
-        final = TopDownJoin(counter[0] + 1, est, inputs, var_order,
+        td_cost = sum(ops[i].est_rows for i in inputs) * len(inputs)
+        final = TopDownJoin(counter[0] + 1, est, td_cost, inputs, var_order,
                             plan.output_vars)
         counter[0] += 1
         ops[final.op_id] = final
 
     assert bag_ops[-1] is root_ops
     return PhysicalPlan(plan, bag_ops, final, ops)
+
+
+def plan_cost(pplan: "PhysicalPlan", bag_cache=None, catalog=None) -> float:
+    """Total modelled cost of the plan — the plan-search objective.
+
+    Structurally equivalent bags (Appendix A.1 dedup) are counted ONCE,
+    and a bag whose engine-lifetime reuse key is already resident in
+    ``bag_cache`` costs nothing (memoized bag costing: a candidate that
+    reuses work other rules/iterations already paid for is preferred).
+    """
+    total = 0.0
+    seen = set()
+    for b in pplan.bag_ops:
+        # alias-RESOLVED structural key: the same key the runtime bag cache
+        # uses, so Barbell's R,S,T vs R2,S2,T2 triangles (all = Edge) are
+        # costed once, exactly as they execute once
+        key = b.materialize.reuse_struct
+        if key in seen:
+            continue
+        seen.add(key)
+        if (bag_cache is not None and catalog is not None
+                and bag_cache.contains(
+                    (b.materialize.reuse_struct,
+                     catalog.version_key(b.materialize.reuse_rels)))):
+            continue
+        total += b.scan.cost + sum(s.cost for s in b.steps) \
+            + b.materialize.cost
+    if pplan.final is not None:
+        total += pplan.final.cost
+    return total
 
 
 def _resolved_struct(dedup_key: Tuple, resolve) -> Tuple:
@@ -368,9 +473,27 @@ def _resolved_struct(dedup_key: Tuple, resolve) -> Tuple:
     return (atom_keys, out_key, sr_key, child_keys)
 
 
-def _bag_agm_bound(plan: QueryPlan, bp: BagPlan, catalog) -> Optional[float]:
+def _bag_agm_bound(plan: QueryPlan, bp: BagPlan, catalog,
+                   memo: Optional[Dict] = None) -> Optional[float]:
     """AGM bound of the bag sub-query with real relation sizes
-    (``min prod |R_e|^{x_e}``, paper Eq. 1) — the cap on every estimate."""
+    (``min prod |R_e|^{x_e}``, paper Eq. 1) — the cap on every estimate.
+    ``memo`` (keyed on the variable-canonicalized bag structure) shares
+    the LP solves across the plan search's candidate lowerings."""
+    key = None
+    if memo is not None:
+        canon: Dict[str, int] = {}
+
+        def cv(v: str) -> int:
+            if v not in canon:
+                canon[v] = len(canon)
+            return canon[v]
+
+        key = tuple(sorted(
+            (catalog.resolve(plan.hg.edges[ei].rel),
+             tuple(cv(v) for v in plan.hg.edges[ei].vars))
+            for ei in bp.bag.edge_idxs))
+        if key in memo:
+            return memo[key]
     try:
         log_sizes = {}
         for ei in bp.bag.edge_idxs:
@@ -378,9 +501,31 @@ def _bag_agm_bound(plan: QueryPlan, bp: BagPlan, catalog) -> Optional[float]:
             log_sizes[ei] = math.log(max(2, catalog.get(rel).num_tuples))
         obj, _x = agm.fractional_cover(plan.hg, list(bp.bag.edge_idxs),
                                        log_sizes)
-        return float(math.exp(min(obj, 700.0)))
+        out = float(math.exp(min(obj, 700.0)))
     except Exception:
-        return None
+        out = None
+    if memo is not None:
+        memo[key] = out
+    return out
+
+
+def _extend_routing(accesses, advancing_atoms, advancing_children,
+                    atom_tries, depth) -> str:
+    """Routing hint for a MATERIALIZING extension: "pair_store" when it is
+    a binary self-join over the same reordered arity-2 trie at depth 1 —
+    the condition under which ``HybridSetStore.intersect_materialize``
+    can serve the expansion cohort-routed (bitset extraction for dense
+    pairs) instead of the generic expand-and-probe search."""
+    if advancing_children or len(advancing_atoms) != 2:
+        return "search"
+    i, j = advancing_atoms
+    a, b = accesses[i], accesses[j]
+    ta, tb = atom_tries[i], atom_tries[j]
+    if (ta is None or ta is not tb or ta.arity != 2
+            or a.selections or b.selections
+            or depth[i] != 1 or depth[j] != 1):
+        return "search"
+    return "pair_store"
 
 
 def _terminal_routing(accesses, advancing_atoms, advancing_children,

@@ -55,6 +55,10 @@ class LevelStats:
     skew: float               # max_fanout / mean_fanout (>= 1)
     mean_inv_density: float   # sampled mean of range/|S| per segment
     value_range: int          # max - min + 1 over the whole level
+    # Evenly-spaced subsample of the per-segment range/|S| values (<= 64
+    # entries) — lets the cost model estimate the Algorithm-3 dense-cohort
+    # fraction at ANY threshold, not just the mean.
+    inv_density_sample: Tuple[float, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,9 +107,14 @@ def _level_stats(values: np.ndarray, offsets: np.ndarray,
     hi = values[offsets[nz + 1] - 1]
     inv = (hi.astype(np.int64) - lo.astype(np.int64) + 1) / deg[nz]
     mean_inv_density = float(inv.mean()) if len(inv) else float("inf")
+    if len(inv) > 64:
+        inv_sample = inv[np.linspace(0, len(inv) - 1, 64).astype(np.int64)]
+    else:
+        inv_sample = inv
     value_range = int(values.max()) - int(values.min()) + 1
     return LevelStats(size, n_parents, mean_fanout, max_fanout, skew,
-                      mean_inv_density, value_range)
+                      mean_inv_density, value_range,
+                      tuple(np.round(inv_sample, 4).tolist()))
 
 
 def collect_trie_stats(trie, sample: int = SAMPLE_SEGMENTS) -> TrieStats:
@@ -169,32 +178,146 @@ class StatisticsCatalog:
         return layout_threshold(self.stats_for(trie), self.block_bits)
 
     # ------------------------------------------------------- estimation
-    def extension_estimate(self, cons: list, universe_hint: Optional[float]
-                           = None) -> float:
-        """Estimated per-frontier-row fanout of one attribute extension.
+    def extension_profile(self, cons: list,
+                          universe_hint: Optional[float] = None):
+        """Candidate-set profile of one attribute extension:
+        ``(fanout, min_cand, max_cand, universe)``.
 
-        ``cons`` lists ``(TrieStats | None, depth, est_rows)`` for every
-        constraining input — physical atoms carry their profiled stats,
-        child-bag inputs carry ``None`` stats plus the child's estimated
-        rows (treated as a uniform relation).  Independence model: the
-        smallest candidate set seeds (the min property), every other
-        input keeps a candidate with probability ``|C_other| / U``.
+        ``cons`` lists ``(TrieStats | None, depth, est_rows)`` — or
+        4-tuples ``(..., arity)`` for child-bag inputs — for every
+        constraining input: physical atoms carry their profiled stats;
+        child-bag pseudo relations are modelled as ``est_rows`` uniform
+        tuples over the co-constraining atoms' value universe ``U``
+        (level-0 distinct values ``min(rows, U)``, deeper fanout
+        ``rows / U^depth``; without a universe, ``rows^(1/arity)`` per
+        level).  Independence model: the smallest candidate set seeds
+        (the min property), every other input keeps a candidate with
+        probability ``|C_other| / U``.
         """
-        cands = []
+        atom_cands = []
+        child_cons = []
         universes = [universe_hint] if universe_hint else []
-        for stats, depth, est_rows in cons:
+        for con in cons:
+            stats, depth, est_rows = con[0], con[1], con[2]
+            arity = con[3] if len(con) > 3 else 2
             if stats is not None:
-                cands.append(stats.candidates_at(depth))
+                atom_cands.append(stats.candidates_at(depth))
                 universes.append(stats.universe_at(depth))
             else:
-                # child-bag pseudo relation: uniform per-level fanout
-                cands.append(max(1.0, float(est_rows)) ** 0.5)
+                child_cons.append((depth, max(1.0, float(est_rows)),
+                                   max(1, int(arity))))
+        universe = max(universes) if universes else None
+        cands = list(atom_cands)
+        for depth, rows, arity in child_cons:
+            if universe is None:
+                cands.append(rows ** (1.0 / arity))
+            elif depth == 0:
+                cands.append(min(rows, universe))
+            else:
+                cands.append(max(1.0, rows / universe ** depth))
         if not cands:
-            return 1.0
-        universe = max(u for u in universes) if universes else max(cands)
+            return 1.0, 1.0, 1.0, 1.0
+        if universe is None:
+            universe = max(cands)
         universe = max(universe, 1.0)
         cands.sort()
         est = cands[0]
         for c in cands[1:]:
             est *= min(1.0, c / universe)
-        return max(est, 1e-9)
+        return max(est, 1e-9), cands[0], cands[-1], universe
+
+    def extension_estimate(self, cons: list, universe_hint: Optional[float]
+                           = None) -> float:
+        """Estimated per-frontier-row fanout of one attribute extension
+        (the fanout component of :meth:`extension_profile`)."""
+        return self.extension_profile(cons, universe_hint)[0]
+
+
+# ------------------------------------------------------------- cost model
+# Relative per-element op weights of the plan-search cost model
+# (``plan_ir`` sums these into per-operator ``cost`` fields). The unit is
+# "one vectorized element touch"; what matters for plan choice is the
+# RATIO between layout cohorts — the blocked-bitset AND+popcount fold
+# touches words (many set elements per op), the uint kernel touches
+# elements, and the lockstep binary search pays a log factor per probe.
+COST_PROBE = 0.25        # one branch-free binary-search probe, per log step
+COST_BITSET_WORD = 0.04  # blocked AND+popcount, per 32-bit word
+COST_UINT_PROBE = 0.5    # uint-kernel membership test, per element
+COST_SORT = 1.0          # sort-based group-by (np.unique), per element-log
+COST_REDUCE = 0.25       # segment reduce, per element
+COST_COUNT_ONLY = 0.05   # single-atom fold: (hi - lo), per frontier row
+
+
+def _log2(x: float) -> float:
+    return math.log2(2.0 + max(0.0, x))
+
+
+def dense_fraction(ls: LevelStats, threshold: float) -> float:
+    """Estimated fraction of the level's sets in the Algorithm-3 dense
+    (bitset) cohort at ``threshold``, from the sampled inverse densities."""
+    if ls.inv_density_sample:
+        below = sum(1 for d in ls.inv_density_sample if d < threshold)
+        return below / len(ls.inv_density_sample)
+    if ls.size == 0:
+        return 0.0
+    return 1.0 if ls.mean_inv_density < threshold else 0.0
+
+
+def extension_cost(frontier: float, min_cand: float, max_cand: float,
+                   n_cons: int) -> float:
+    """Modelled work of one materializing attribute extension: expand the
+    min-property seed, then probe every other input with the lockstep
+    binary search."""
+    expanded = max(frontier, 1.0) * max(min_cand, 1.0)
+    return expanded * (1.0 + COST_PROBE * max(0, n_cons - 1)
+                       * _log2(max_cand))
+
+
+def fold_cost(frontier: float, min_cand: float, max_cand: float,
+              n_cons: int, routing: str,
+              set_stats: Optional[LevelStats],
+              threshold: Optional[float],
+              block_bits: int = BASE_BLOCK_BITS) -> float:
+    """Modelled work of the early-aggregation terminal fold.
+
+    ``pair_kernel`` routes cost through the layout cohorts: bitset-cohort
+    pairs pay word ops (``range / 32`` per pair), uint-cohort pairs pay
+    per-element probes — so on dense data the SAME fold is modelled
+    cheaper than the generic search path, which is the lever that lets
+    the plan search prefer orders whose folds land on kernel-friendly
+    cohorts."""
+    F = max(frontier, 1.0)
+    if n_cons <= 1:
+        return F * COST_COUNT_ONLY
+    if routing == "pair_kernel" and set_stats is not None:
+        thr = threshold if threshold is not None else float(block_bits)
+        df = dense_fraction(set_stats, thr)
+        d = max(set_stats.mean_fanout, 1.0)
+        per_bitset = max(1.0, d * min(set_stats.mean_inv_density, thr)
+                         / 32.0) * COST_BITSET_WORD
+        per_uint = d * COST_UINT_PROBE
+        per_search = d * COST_PROBE * _log2(d)
+        # mixed (uint x bitset) pairs probe element-wise; weight the three
+        # cohort combinations by the dense fraction.
+        per_pair = (df * df * per_bitset
+                    + 2.0 * df * (1.0 - df) * per_uint
+                    + (1.0 - df) * (1.0 - df) * min(per_uint, per_search))
+        return F * per_pair
+    # generic fold: materialize the expansion locally, then segment-reduce
+    expanded = F * max(min_cand, 1.0)
+    return (extension_cost(frontier, min_cand, max_cand, n_cons)
+            + expanded * COST_REDUCE)
+
+
+def projection_cost(rows: float, has_extra_vars: bool,
+                    scalar_output: bool) -> float:
+    """Modelled cost of a bag's final projection: sort-based group-by when
+    non-output attributes survive in the frontier, a segment reduce for
+    scalar aggregates, free when the frontier already matches the
+    output."""
+    R = max(rows, 1.0)
+    if has_extra_vars:
+        return R * _log2(R) * COST_SORT
+    if scalar_output:
+        return R * COST_REDUCE
+    return 0.0

@@ -1,0 +1,269 @@
+"""Cost-based plan search (core.plan_search) tests.
+
+Locks the PR's acceptance behaviour: (1) the search picks a
+non-appearance-order plan on the lollipop query and stays parity-exact
+with the ``REPRO_PLAN_SEARCH=off`` seed plan on both backends, (2) the
+barbell query KEEPS the seed plan (its Appendix-A.1 shared-triangle
+dedup makes the seed cheapest — a cost model that loses the sharing
+would regress it), (3) on random small acyclic queries the bounded
+search never returns a plan costlier than exhaustive enumeration's best,
+and (4) the cohort-routed materializing intersections
+(``HybridSetStore.intersect_materialize``) are exercised and counted.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import random_undirected_graph
+from repro.core import ghd as ghd_mod
+from repro.core import plan_ir, plan_search
+from repro.core import workload as W
+from repro.core.datalog import parse
+from repro.core.engine import Engine
+from repro.core.hypergraph import Hypergraph
+
+ALIASES = W.ALIASES
+
+
+def make_engine(src, dst, backend="numpy", **kw):
+    eng = Engine(backend=backend, **kw)
+    eng.load_edges("Edge", src, dst)
+    for a in ALIASES:
+        eng.alias(a, "Edge")
+    return eng
+
+
+def _scalar(res):
+    return float(np.asarray(res.scalar()))
+
+
+# ------------------------------------------------ plan-change regression
+@pytest.mark.parametrize("backend", ["numpy", "device"])
+def test_lollipop_search_changes_order_with_parity(backend):
+    """Acceptance lock-in: cost-based search roots the lollipop GHD at
+    the triangle bag (skipping the seed plan's per-x sort-projection),
+    changing the global order away from the appearance-order tie-break —
+    with exact result parity against REPRO_PLAN_SEARCH=off."""
+    src, dst, _ = random_undirected_graph(40, 0.2, 5)
+    on = make_engine(src, dst, backend, plan_search=True)
+    off = make_engine(src, dst, backend, plan_search=False)
+    r_on, r_off = on.query(W.LOLLIPOP), off.query(W.LOLLIPOP)
+    assert _scalar(r_on) == _scalar(r_off)
+
+    ps = on.plan_metadata()[0]["plan_search"]
+    assert ps["enabled"] is True
+    assert ps["order_changed"] is True
+    assert ps["chosen_order"] != ps["baseline_order"]
+    assert ps["chosen_cost"] < ps["baseline_cost"]
+    assert ps["candidates"] > 1
+    # the off-engine really ran the appearance-order plan
+    off_ps = off.plan_metadata()[0]["plan_search"]
+    assert off_ps == {"enabled": False}
+    assert off.plan_metadata()[0]["order"] == ps["baseline_order"]
+    # min-fhw is a hard constraint of the candidate space
+    assert ps["chosen_fhw"] == pytest.approx(1.5)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "device"])
+def test_barbell_search_keeps_seed_plan_and_dedup(backend):
+    """The barbell seed plan computes its two alias-equivalent triangle
+    bags ONCE (Appendix A.1); the cost model counts shared bags once, so
+    re-rooting (which would break the sharing and double the triangle
+    work) must lose."""
+    src, dst, _ = random_undirected_graph(40, 0.2, 6)
+    on = make_engine(src, dst, backend, plan_search=True)
+    off = make_engine(src, dst, backend, plan_search=False)
+    assert _scalar(on.query(W.BARBELL)) == _scalar(off.query(W.BARBELL))
+    ps = on.plan_metadata()[0]["plan_search"]
+    assert ps["order_changed"] is False
+    assert ps["chosen_index"] == 0
+    assert on.dispatch_summary()["bag_cache.hits"] >= 1
+
+
+def test_symmetric_queries_keep_appearance_order():
+    """On symmetric data every triangle/K4 order costs the same — strict
+    argmin must keep the seed (candidate 0), bit-for-bit."""
+    src, dst, _ = random_undirected_graph(30, 0.3, 7)
+    eng = make_engine(src, dst, plan_search=True)
+    eng.query(W.TRIANGLE_COUNT)
+    assert eng.plan_metadata()[0]["plan_search"]["chosen_index"] == 0
+    eng.query(W.FOUR_CLIQUE)
+    assert eng.plan_metadata()[0]["plan_search"]["chosen_index"] == 0
+    assert eng.plan_metadata()[0]["order"] == ["x", "y", "z", "a"]
+
+
+# ------------------------------------------------------- search machinery
+def test_candidate_orders_seed_first_and_invariants():
+    rule = parse(W.BARBELL).rules[0]
+    hg = Hypergraph.from_rule(rule)
+    g = ghd_mod.decompose(hg)
+    orders = ghd_mod.candidate_orders(g)
+    assert orders[0] == ghd_mod.attribute_order(g)
+    assert len(orders) == len(set(orders)) > 1
+    for o in orders:
+        assert sorted(o) == sorted(hg.vertices)
+
+
+def test_decompose_candidates_seed_first_min_width_only():
+    rule = parse(W.LOLLIPOP).rules[0]
+    hg = Hypergraph.from_rule(rule)
+    seed = ghd_mod.decompose(hg)
+    cands = ghd_mod.decompose_candidates(hg)
+    assert len(cands) > 1
+    assert all(g.width == pytest.approx(seed.width) for g in cands)
+    first = cands[0]
+    assert sorted(first.root.edge_idxs) == sorted(seed.root.edge_idxs)
+    assert first.num_bags() == seed.num_bags()
+
+
+def test_escape_hatch_env_variable(monkeypatch):
+    monkeypatch.setenv(plan_search.ENV_FLAG, "off")
+    assert Engine().plan_search is False
+    monkeypatch.setenv(plan_search.ENV_FLAG, "on")
+    assert Engine().plan_search is True
+    monkeypatch.delenv(plan_search.ENV_FLAG)
+    assert Engine().plan_search is True
+    assert Engine(plan_search=False).plan_search is False
+
+
+def test_search_overhead_paid_once_per_rule():
+    """Recursion bumps catalog versions every round; the search decision
+    is pinned per rule so later rounds only re-annotate the chosen plan
+    (the physical plan itself still rebuilds on fresh statistics)."""
+    src, dst, _ = random_undirected_graph(24, 0.3, 8)
+    eng = make_engine(src, dst, plan_search=True)
+    eng.query(W.sssp_program(int(src[0])))
+    assert len(eng._search_cache) >= 1
+    n_decided = len(eng._search_cache)
+    eng.query(W.sssp_program(int(src[0])))
+    assert len(eng._search_cache) == n_decided
+
+
+# --------------------------------------------- cost-model property test
+def _random_acyclic_count_query(rng, n_atoms):
+    """A random ≤4-atom ACYCLIC (tree-shaped) scalar COUNT query."""
+    vars_ = ["v0"]
+    atoms = []
+    for i in range(n_atoms):
+        parent = vars_[rng.randrange(len(vars_))]
+        child = f"v{i + 1}"
+        vars_.append(child)
+        rel = ALIASES[i % len(ALIASES)]
+        pair = (parent, child) if rng.random() < 0.5 else (child, parent)
+        atoms.append(f"{rel}({pair[0]},{pair[1]})")
+    return f"C(;w:long) :- {','.join(atoms)}; w=<<COUNT(*)>>."
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_atoms=st.integers(min_value=1, max_value=4))
+def test_search_never_worse_than_exhaustive_best(seed, n_atoms):
+    """Property: on random ≤4-atom acyclic queries the bounded search's
+    chosen cost never exceeds the best over EXHAUSTIVE candidate
+    enumeration (i.e. the beam/top-k bounds lose nothing at this query
+    size), and the chosen plan's results match the seed plan's."""
+    import random
+
+    rng = random.Random(seed)
+    q = _random_acyclic_count_query(rng, n_atoms)
+    src, dst, _ = random_undirected_graph(24, 0.25, seed % 97)
+    eng = make_engine(src, dst, plan_search=False)
+    rule = parse(q).rules[0]
+    plan = eng._compile(rule)
+
+    sr = plan_search.search(plan, eng.stats_catalog, eng.catalog)
+    exhaustive = plan_search.enumerate_candidates(
+        plan, k_partitions=512, max_roots=16, max_orders=720,
+        max_candidates=4096)
+    memo = {}
+    best = min(
+        plan_ir.plan_cost(plan_ir.build_physical_plan(
+            c, eng.stats_catalog, eng.catalog, agm_memo=memo))
+        for c in exhaustive)
+    assert sr.cost <= best * (1 + 1e-9) + 1e-9
+    assert len(exhaustive) >= sr.candidates
+
+    # and the chosen plan computes the same answer as the seed plan
+    on = make_engine(src, dst, plan_search=True)
+    assert _scalar(on.query(q)) == _scalar(eng.query(q))
+
+
+# -------------------------------------- materializing intersection routing
+@pytest.mark.parametrize("backend", ["numpy", "device"])
+def test_materializing_intersections_cohort_routed(backend):
+    """ROADMAP known issue closed: materializing binary self-join
+    intersections route through the layout store by plan hint — dense
+    pairs take the bitset extraction — instead of always falling back to
+    the uint search; dispatch counters prove it."""
+    src, dst, adj = random_undirected_graph(30, 0.4, 9)
+    eng = make_engine(src, dst, backend)
+    res = eng.query(W.TRIANGLE_LIST)
+    st_ = eng.dispatch_summary()
+    assert st_.get("extend.pair_materialize_calls", 0) >= 1, st_
+    assert (st_.get("intersect.materialize_bitset", 0)
+            + st_.get("intersect.materialize_uint", 0)) > 0, st_
+    # dense graph, small id range -> the bitset cohort must have fired
+    assert st_.get("intersect.materialize_bitset", 0) > 0, st_
+    got = set(zip(res.columns["x"].tolist(), res.columns["y"].tolist(),
+                  res.columns["z"].tolist()))
+    want = {(x, y, z)
+            for x in range(adj.shape[0]) for y in range(adj.shape[0])
+            for z in range(adj.shape[0])
+            if adj[x, y] and adj[y, z] and adj[x, z]}
+    assert got == want
+
+
+def test_materialize_bitset_positions_align_with_annotations():
+    """The recovered positions index the set-level value array — the same
+    contract the search path meets — so annotation gathers stay correct:
+    SUM over an annotated triangle listing matches the brute force."""
+    src, dst, adj = random_undirected_graph(26, 0.4, 10)
+    ann = (np.arange(len(src)) % 7 + 1).astype(np.float64)
+    eng = Engine()
+    eng.load_edges("Edge", src, dst, annotation=ann)
+    for a in ALIASES:
+        eng.alias(a, "Edge")
+    res = eng.query("C(x,y;w:float) :- R(x,y),S(y,z),T(x,z); "
+                    "w=<<SUM(z)>>.")
+    st_ = eng.dispatch_summary()
+    # per-(x,y) sum of T(x,z) annotations over completing z's
+    t = eng.catalog.get("Edge")
+    tuples, tann = t.materialize()
+    emap = {(int(a_), int(b_)): float(w)
+            for (a_, b_), w in zip(tuples, tann)}
+    got = {(int(x), int(y)): float(w)
+           for x, y, w in zip(res.columns["x"], res.columns["y"],
+                              np.asarray(res.annotation))}
+    want = {}
+    n = adj.shape[0]
+    for x in range(n):
+        for y in range(n):
+            if not adj[x, y]:
+                continue
+            s = sum(emap[(y, z)] * emap[(x, z)]
+                    for z in range(n) if adj[y, z] and adj[x, z])
+            if s:
+                want[(x, y)] = emap[(x, y)] * s
+    assert got == pytest.approx(want)
+
+
+# ---------------------------------------------------- metadata contract
+def test_plan_metadata_reports_search_and_estimation_error():
+    src, dst, _ = random_undirected_graph(24, 0.3, 11)
+    eng = make_engine(src, dst, plan_search=True)
+    eng.query(W.LOLLIPOP)
+    md = eng.plan_metadata()[0]
+    import json
+    json.dumps(md)  # stays artifact-serializable
+    ps = md["plan_search"]
+    for key in ("candidates", "chosen_cost", "baseline_cost",
+                "chosen_order", "baseline_order", "order_changed"):
+        assert key in ps
+    assert md["est_error"]["n_bags"] >= 1
+    assert md["est_error"]["geo_mean_q"] >= 1.0
+    assert md["est_cost"] > 0
+    for bag in md["bags"]:
+        assert bag["cost"] >= 0
+        for step in bag["steps"]:
+            assert "cost" in step
