@@ -49,6 +49,42 @@ def _result_digest(res):
     return float(np.asarray(ann, dtype=np.float64).sum())
 
 
+def _ab_walls(eng, q, reps, set_mode, capture_counters=False):
+    """Warmed, interleaved A/B timing shared by the plan-search and
+    device-recursion comparisons: ``set_mode(False|True)`` toggles the
+    engine feature, one untimed execution per mode absorbs plan search /
+    jit / codegen / store builds, then ``max(reps, 2)`` interleaved
+    timed pairs (machine-speed drift hits both modes).  Returns
+    ``(walls dict, last off-mode result, last off-mode counter delta)``
+    and leaves the feature switched back on."""
+    from repro.core.executor import BagResultCache
+
+    def one(mode_on):
+        set_mode(mode_on)
+        eng.bag_cache = BagResultCache()
+        before = dict(eng.backend.stats) if capture_counters else None
+        t0 = time.perf_counter()
+        res = eng.query(q)
+        wall = time.perf_counter() - t0
+        delta = ({k: v - before.get(k, 0)
+                  for k, v in eng.backend.stats.items()}
+                 if capture_counters else None)
+        return wall, res, delta
+
+    ws = {False: [], True: []}
+    off_res = off_delta = None
+    for mode in (False, True):      # untimed warmup
+        one(mode)
+    for _ in range(max(reps, 2)):   # interleaved timed pairs
+        for mode in (False, True):
+            w, res, d = one(mode)
+            ws[mode].append(w)
+            if mode is False:
+                off_res, off_delta = res, d
+    set_mode(True)
+    return ws, off_res, off_delta
+
+
 def run_backend_suite(smoke: bool) -> list:
     """Every paper query on every backend: wall time + dispatch counters.
 
@@ -121,24 +157,9 @@ def run_backend_suite(smoke: bool) -> list:
             changed = any(r.get("plan_search", {}).get("order_changed")
                           for r in plan_md)
             if changed and eng.plan_search:
-                def one(mode_on):
-                    eng.plan_search = mode_on
-                    eng.bag_cache = BagResultCache()
-                    t0_ = time.perf_counter()
-                    res_ = eng.query(q)
-                    return time.perf_counter() - t0_, res_
-
-                ws = {False: [], True: []}
-                off_res = None
-                for mode in (False, True):     # warmup, untimed: absorbs
-                    one(mode)                  # plan search + codegen
-                for _ in range(max(reps, 2)):  # interleaved: machine-speed
-                    for mode in (False, True):  # drift hits both modes
-                        w, res_ = one(mode)
-                        ws[mode].append(w)
-                        if mode is False:
-                            off_res = res_
-                eng.plan_search = True
+                ws, off_res, _ = _ab_walls(
+                    eng, q, reps,
+                    lambda m: setattr(eng, "plan_search", m))
                 on_wall, off_wall = min(ws[True]), min(ws[False])
                 row["plan_search"] = {
                     "order_changed": True,
@@ -149,6 +170,34 @@ def run_backend_suite(smoke: bool) -> list:
                         digest, _result_digest(off_res),
                         rtol=1e-5, atol=1e-6)),
                 }
+            # Recursion ran as a device-resident fixpoint: ALSO time the
+            # pre-PR per-round host loop (device_recursion off) warmed,
+            # recording the per-round wall-time win + result parity — the
+            # recursion half of the bench gate.
+            rec_rounds = int(dispatch.get("recursion.device_rounds", 0))
+            if backend == "device" and rec_rounds:
+                ws, host_res, host_delta = _ab_walls(
+                    eng, q, reps,
+                    lambda m: setattr(eng, "device_recursion", m),
+                    capture_counters=True)
+                host_rounds = int(host_delta.get("recursion.host_rounds",
+                                                 rec_rounds))
+                dev_w, host_w = min(ws[True]), min(ws[False])
+                row["device_recursion"] = {
+                    "rounds": rec_rounds,
+                    "wall_s_warm": dev_w,
+                    "host_loop_wall_s": host_w,
+                    "host_loop_rounds": host_rounds,
+                    # whole-query walls divided by rounds: approximate
+                    # (non-recursive rules amortized in), comparable
+                    # between the two modes on the same query
+                    "per_round_wall_s": dev_w / max(rec_rounds, 1),
+                    "per_round_host_wall_s": host_w / max(host_rounds, 1),
+                    "speedup_vs_host_loop": host_w / max(dev_w, 1e-9),
+                    "parity_vs_host_loop": bool(np.isclose(
+                        digest, _result_digest(host_res),
+                        rtol=1e-5, atol=1e-6)),
+                }
             out.append(row)
     return out
 
@@ -156,14 +205,22 @@ def run_backend_suite(smoke: bool) -> list:
 # ------------------------------------------------- bench-regression gate
 def _gate_summary(suite: list) -> dict:
     """The comparable slice of a suite run: wall + parity + EXACT dispatch
-    counters per query × backend."""
+    counters per query × backend.  Recursion queries on the device
+    backend additionally gate on host-loop parity — the dispatch
+    counters (``recursion.device_rounds`` / ``recursion.host_trie_
+    rebuilds``) are already part of the exact comparison, so a recursion
+    round silently falling back to the host loop fails the gate."""
     out = {}
     for r in suite:
-        out[f"{r['query']}/{r['backend']}"] = {
+        entry = {
             "wall_s": float(r["wall_s"]),
             "parity": bool(r["parity"]),
             "dispatch": {k: int(v) for k, v in sorted(r["dispatch"].items())},
         }
+        rec = r.get("device_recursion")
+        if rec is not None:
+            entry["recursion_parity"] = bool(rec["parity_vs_host_loop"])
+        out[f"{r['query']}/{r['backend']}"] = entry
     return out
 
 
@@ -203,6 +260,9 @@ def check_baseline(suite: list, path: str, tolerance: float,
             continue
         if not c["parity"]:
             failures.append(f"{key}: cross-backend parity FAILED")
+        if b.get("recursion_parity") and not c.get("recursion_parity", True):
+            failures.append(f"{key}: device-recursion vs host-loop parity "
+                            f"FAILED")
         limit = b["wall_s"] * tolerance + BASELINE_ABS_SLACK_S
         if c["wall_s"] > limit:
             failures.append(
@@ -289,6 +349,13 @@ def main() -> None:
         if ps:
             extra = (f"  # plan changed: {ps['speedup_vs_off']:.2f}x vs "
                      f"search-off (parity={ps['parity_vs_off']})")
+        rec = row_.get("device_recursion")
+        if rec:
+            extra += (f"  # device recursion: {rec['rounds']} rounds, "
+                      f"{rec['speedup_vs_host_loop']:.2f}x vs host loop "
+                      f"({rec['per_round_host_wall_s'] * 1e3:.1f} -> "
+                      f"{rec['per_round_wall_s'] * 1e3:.1f} ms/round, "
+                      f"parity={rec['parity_vs_host_loop']})")
         print(f"{row_['query']},{row_['backend']},"
               f"{row_['wall_s'] * 1e3:.1f},{row_['parity']},"
               f"{top[0] if top else '-'}{extra}")

@@ -41,6 +41,7 @@ from repro.core import intersect as I
 from repro.core.layouts import engine_store_for
 from repro.core.semiring import Semiring
 from repro.kernels.bitset_intersect.ops import as_word_kernel
+from repro.kernels.materialize.ops import as_materialize_kernel
 from repro.kernels.uint_intersect.ops import intersect_count_csr_batched
 
 # Pairs whose larger set exceeds this stay on the lockstep binary search
@@ -174,6 +175,7 @@ class DeviceBackend(ExecBackend):
         super().__init__()
         self._interpret = interpret
         self._word_kernel = as_word_kernel(interpret=interpret)
+        self._materialize_kernel = as_materialize_kernel(interpret=interpret)
         self._uint_max_len = uint_max_len
 
         def uint_kernel(offsets, neighbors, u, v):
@@ -225,6 +227,7 @@ class DeviceBackend(ExecBackend):
     def _pair_store(self, trie, threshold=None):
         return engine_store_for(trie, word_kernel=self._word_kernel,
                                  uint_kernel=self._uint_kernel,
+                                 materialize_kernel=self._materialize_kernel,
                                  uint_max_len=self._uint_max_len,
                                  counter=self.stats, cache_tag="device",
                                  threshold=threshold)

@@ -29,6 +29,7 @@ each intersection.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -36,14 +37,28 @@ import numpy as np
 from repro.core import codegen as codegen_mod
 from repro.core import plan_ir
 from repro.core import plan_search as plan_search_mod
+from repro.core import recursion as recursion_mod
 from repro.core.backend import ExecBackend, make_backend
 from repro.core.compile import QueryPlan, compile_rule
-from repro.core.datalog import AggRef, Rule, eval_expr, parse
+from repro.core.datalog import (AggRef, Num, Rule, ScalarRef, Var, eval_expr,
+                                parse)
 from repro.core.executor import BagResultCache, Catalog, Executor
 from repro.core.gj import GJResult
-from repro.core.semiring import AGG_TO_SEMIRING, MAX_MIN, MIN_PLUS
+from repro.core.semiring import AGG_TO_SEMIRING, MAX_MIN, MIN_PLUS, SUM_F32
 from repro.core.statistics import StatisticsCatalog
 from repro.core.trie import Trie
+
+# Escape hatch for the device-resident recursion loops (default on under
+# the device backend): "off"/"0"/"false" pins the per-round host loop —
+# the differential-testing oracle the parity tests compare against.
+DEVICE_RECURSION_ENV = "REPRO_DEVICE_RECURSION"
+
+
+def device_recursion_enabled(default: bool = True) -> bool:
+    val = os.environ.get(DEVICE_RECURSION_ENV)
+    if val is None:
+        return default
+    return val.strip().lower() not in ("off", "0", "false", "no")
 
 
 @dataclasses.dataclass
@@ -79,7 +94,8 @@ class Engine:
     """Public API: load relations, run datalog programs."""
 
     def __init__(self, use_ghd: bool = True, use_codegen: bool = True,
-                 backend=None, plan_search: Optional[bool] = None):
+                 backend=None, plan_search: Optional[bool] = None,
+                 device_recursion: Optional[bool] = None):
         self.catalog = Catalog()
         self.use_ghd = use_ghd
         self.use_codegen = use_codegen
@@ -90,6 +106,12 @@ class Engine:
         # appearance-order plan, kept as the differential-testing oracle)
         self.plan_search = (plan_search_mod.enabled_by_env()
                             if plan_search is None else bool(plan_search))
+        # device-resident recursion (seminaive/naive fixpoints as one
+        # jitted loop, core.recursion): only meaningful under the device
+        # backend; None defers to REPRO_DEVICE_RECURSION (default on)
+        self.device_recursion = (device_recursion_enabled()
+                                 if device_recursion is None
+                                 else bool(device_recursion))
         self.dictionary: Dict[object, int] = {}
         self.last_plan: Optional[QueryPlan] = None
         self.last_physical: Optional[plan_ir.PhysicalPlan] = None
@@ -176,11 +198,17 @@ class Engine:
         (``intersect.*`` count pairs), extension-loop host-sync discipline
         (``extend.calls`` vs ``extend.host_syncs``), device uploads,
         statistics-driven layout routing (``layout.stats_driven`` /
-        ``layout.threshold_bits``), and engine-lifetime bag-cache traffic
-        (``bag_cache.hits`` / ``bag_cache.misses``)."""
+        ``layout.threshold_bits``), engine-lifetime bag-cache traffic
+        (``bag_cache.hits`` / ``bag_cache.misses``), reorder-index builds
+        (``reorder_cache.builds`` — plan-search losers must build none),
+        and the recursion sync discipline (``recursion.device_rounds`` /
+        ``recursion.device_fixpoints`` vs ``recursion.host_rounds`` /
+        ``recursion.host_trie_rebuilds``)."""
         out = self.backend.dispatch_summary()
         out["bag_cache.hits"] = self.bag_cache.hits
         out["bag_cache.misses"] = self.bag_cache.misses
+        out["reorder_cache.builds"] = self.catalog.reorder_builds
+        out["reorder_cache.hits"] = self.catalog.reorder_hits
         return out
 
     def plan_metadata(self) -> List[dict]:
@@ -339,6 +367,188 @@ class Engine:
             return self._seminaive(rule, sr)
         return self._naive(rule)
 
+    # ----------------------------------------- device-resident fast path
+    def _spmv_shape(self, rule: Rule):
+        """Recognize the semiring-SpMV recursion shape the device loops
+        execute: head ``Rec(h)``, body = ONE binary non-recursive atom
+        over {h, r} + the recursive atom ``Rec(r)`` + optional unary
+        non-recursive atoms ``A_i(r)``, aggregating over ``r``.  Returns
+        ``(edge_atom, unary_atoms, h, r)`` or None (host loop)."""
+        if len(rule.head.keyvars) != 1:
+            return None
+        h = rule.head.keyvars[0]
+        agg = rule.agg
+        if agg is None or agg.op == "count" or agg.arg in ("*", h):
+            return None
+        r = agg.arg
+        name = self.catalog.resolve(rule.head.rel)
+        rec_atoms = [a for a in rule.body
+                     if self.catalog.resolve(a.rel) == name]
+        if len(rec_atoms) != 1 or rec_atoms[0].terms != (Var(r),):
+            return None
+        others = [a for a in rule.body if a is not rec_atoms[0]]
+        if any(not isinstance(t, Var) for a in others for t in a.terms):
+            return None
+        binary = [a for a in others if len(a.terms) == 2]
+        unary = [a for a in others if len(a.terms) == 1]
+        if len(binary) != 1 or len(binary) + len(unary) != len(others):
+            return None
+        e = binary[0]
+        if set(e.vars) != {h, r} or e.rel not in self.catalog \
+                or self.catalog.get(e.rel).arity != 2:
+            return None
+        for a in unary:
+            if a.vars != (r,) or a.rel not in self.catalog \
+                    or self.catalog.get(a.rel).arity != 1:
+                return None
+        return e, unary, h, r
+
+    def _recursion_expr_fn(self, rule: Rule):
+        """Jit-stable annotation-expression applier, or None when the
+        expression references something the device loop cannot bake in
+        (e.g. a non-scalar "scalar" relation)."""
+        names = _expr_scalar_names(rule.agg_expr)
+        scalars = {}
+        for nm in names:
+            v = self.catalog.scalars.get(nm)
+            if v is None or np.ndim(v) != 0:
+                return None
+            scalars[nm] = float(v)
+        return recursion_mod.ExprFn(rule.agg_expr, scalars)
+
+    def _device_recursion_allowed(self) -> bool:
+        return self.backend.name == "device" and self.device_recursion
+
+    def _record_device_recursion(self, rule: Rule, strategy: str,
+                                 rounds: int):
+        self.backend.stats["recursion.device_fixpoints"] += 1
+        self.backend.stats["recursion.device_rounds"] += int(rounds)
+        self._program_metadata.append({
+            "head": rule.head.rel,
+            "recursion": {"mode": "device", "strategy": strategy,
+                          "rounds": int(rounds)},
+            "bags": [],
+            "plan_search": {"enabled": False},
+            "est_error": {"n_bags": 0, "geo_mean_q": None},
+        })
+
+    def _seminaive_device(self, rule: Rule, sr) -> Optional[QueryResult]:
+        """Seminaive recursion as ONE jitted device loop (fixed-shape
+        masked delta over the vertex domain, mirroring ``recursion.sssp``)
+        instead of a host delta-trie rebuild per round.  Returns None when
+        the rule/data fall outside the SpMV shape — the host loop is the
+        fallback and the differential oracle."""
+        if not self._device_recursion_allowed():
+            return None
+        shape = self._spmv_shape(rule)
+        if shape is None or shape[1]:   # unary extras: host loop
+            return None
+        e, _unary, h, r = shape
+        apply_expr = self._recursion_expr_fn(rule)
+        if apply_expr is None:
+            return None
+        name = rule.head.rel
+        base = self.catalog.get(name)
+        keys0 = base.levels[0].values.astype(np.int64)
+        if base.annotation is None or len(keys0) == 0:
+            return None
+        ann0 = np.asarray(base.annotation, dtype=np.float64)
+        zero = float(np.asarray(sr.zero))
+        if not np.all(ann0 != zero):
+            # a base tuple annotated with the semiring zero would be
+            # indistinguishable from "underived" in the masked state
+            return None
+        src, dst, eann = self.catalog.get(e.rel).edge_view()
+        gather_v, scatter_v = (src, dst) if e.vars == (r, h) else (dst, src)
+        n = int(max(keys0.max(initial=0),
+                    gather_v.max(initial=0), scatter_v.max(initial=0))) + 1
+        max_rounds = (int(rule.recursion.value)
+                      if rule.recursion.kind == "iterations" else 1 << 30)
+        keys, ann, rounds = recursion_mod.seminaive_device_fixpoint(
+            sr, apply_expr, gather_v, scatter_v, eann, n, keys0, ann0,
+            max_rounds)
+        self._record_device_recursion(rule, "seminaive", rounds)
+        keyvars = tuple(rule.head.keyvars)
+        keys32 = keys.astype(np.int32)
+        self.catalog.add(name, Trie.build(name, keyvars, [keys32],
+                                          annotation=ann))
+        return QueryResult(keyvars, {keyvars[0]: keys32}, ann)
+
+    def _naive_device(self, rule: Rule, prev_keys: np.ndarray,
+                      iters: Optional[int], tol: Optional[float],
+                      max_iters: int) -> Optional[QueryResult]:
+        """Naive recursion (every annotation rewritten every round) as ONE
+        jitted device loop over the FIXED head key set: memberships and
+        non-recursive annotation factors are resolved once on host, then
+        every round is a gather → ⊗-chain → segment-⨁ → expression
+        rewrite with zero per-round host syncs (tolerance checked on
+        device inside the while-loop)."""
+        if not self._device_recursion_allowed():
+            return None
+        agg = rule.agg
+        if agg is None or AGG_TO_SEMIRING.get(agg.op) is not SUM_F32:
+            return None
+        shape = self._spmv_shape(rule)
+        if shape is None:
+            return None
+        e, unary, h, r = shape
+        sr = SUM_F32
+        apply_expr = self._recursion_expr_fn(rule)
+        if apply_expr is None:
+            return None
+        name = rule.head.rel
+        base = self.catalog.get(name)
+        if base.annotation is None or len(prev_keys) == 0:
+            return None
+        keys = np.asarray(prev_keys, dtype=np.int64)
+        ann0 = np.asarray(base.annotation, dtype=np.float64)
+        src, dst, eann = self.catalog.get(e.rel).edge_view()
+        gather_v, scatter_v = (src, dst) if e.vars == (r, h) else (dst, src)
+
+        def positions(sorted_keys, queries):
+            if len(sorted_keys) == 0:
+                return (np.zeros(len(queries), np.int64),
+                        np.zeros(len(queries), bool))
+            pos = np.searchsorted(sorted_keys, queries)
+            pos = np.clip(pos, 0, len(sorted_keys) - 1)
+            return pos, sorted_keys[pos] == queries
+
+        out_idx, valid = positions(keys, scatter_v)
+        rec_idx, ok = positions(keys, gather_v)
+        valid = valid & ok
+        # ⊗-factors in body-atom order (exactly the fold's mul order)
+        factor_kinds: List[str] = []
+        gathers: List[np.ndarray] = []
+        for a in rule.body:
+            if self.catalog.resolve(a.rel) == self.catalog.resolve(name):
+                factor_kinds.append("rec")
+            elif len(a.terms) == 2:
+                if eann is not None:
+                    factor_kinds.append("static")
+                    gathers.append(np.asarray(eann))
+            else:
+                t = self.catalog.get(a.rel)
+                upos, ok = positions(
+                    t.levels[0].values.astype(np.int64), gather_v)
+                valid = valid & ok
+                if t.annotation is not None:
+                    factor_kinds.append("static")
+                    gathers.append(np.asarray(t.annotation)[upos])
+        out_idx = out_idx[valid]
+        rec_idx = rec_idx[valid]
+        factor_anns = [g[valid] for g in gathers]
+        if iters is None and tol is None:
+            iters = max_iters   # bare-star naive: fixed round budget
+        ann, rounds = recursion_mod.naive_device_fixpoint(
+            sr, apply_expr, out_idx, rec_idx, tuple(factor_kinds),
+            factor_anns, len(keys), ann0, iters, tol, max_iters)
+        self._record_device_recursion(rule, "naive", rounds)
+        keyvars = tuple(rule.head.keyvars)
+        keys32 = keys.astype(np.int32)
+        self.catalog.add(name, Trie.build(name, keyvars, [keys32],
+                                          annotation=ann))
+        return QueryResult(keyvars, {keyvars[0]: keys32}, ann)
+
     def _naive(self, rule: Rule) -> QueryResult:
         """Naive recursion: re-evaluate the body against the full current
         relation each round (paper: used for PageRank)."""
@@ -354,9 +564,14 @@ class Engine:
                     else None)
         assert len(keyvars) == 1, "naive recursion implemented for unary heads"
 
+        fast = self._naive_device(rule, prev_keys, iters, tol, max_iters)
+        if fast is not None:
+            return fast
+
         default = None
         res = None
         for it in range(max_iters):
+            self.backend.stats["recursion.host_rounds"] += 1
             res = self._eval_rule(rule_without_star(rule), materialize=False)
             if default is None:
                 default = float(eval_expr(rule.agg_expr, np.zeros(1),
@@ -375,6 +590,7 @@ class Engine:
                     prev_ann = new_ann
                     break
             prev_ann = new_ann
+            self.backend.stats["recursion.host_trie_rebuilds"] += 1
             t = Trie.build(name, keyvars, [prev_keys], annotation=new_ann)
             self.catalog.add(name, t)
         t = Trie.build(name, keyvars, [prev_keys], annotation=prev_ann)
@@ -387,6 +603,9 @@ class Engine:
         name = rule.head.rel
         keyvars = tuple(rule.head.keyvars)
         assert len(keyvars) == 1, "seminaive implemented for unary heads"
+        fast = self._seminaive_device(rule, sr)
+        if fast is not None:
+            return fast
         base = self.catalog.get(name)
         keys = base.levels[0].values.copy().astype(np.int64)
         ann = np.asarray(base.annotation, dtype=np.float64).copy()
@@ -405,6 +624,8 @@ class Engine:
         rounds = 0
         while len(delta_keys) and rounds < max_rounds:
             rounds += 1
+            self.backend.stats["recursion.host_rounds"] += 1
+            self.backend.stats["recursion.host_trie_rebuilds"] += 1
             self.catalog.add(delta_name, Trie.build(
                 delta_name, keyvars, [delta_keys.astype(np.int32)],
                 annotation=delta_ann))
@@ -430,6 +651,7 @@ class Engine:
             delta_keys = uniq[improved]
             delta_ann = merged[improved]
             keys, ann = uniq, merged
+            self.backend.stats["recursion.host_trie_rebuilds"] += 1
             t = Trie.build(name, keyvars, [keys.astype(np.int32)],
                            annotation=ann)
             self.catalog.add(name, t)
@@ -453,6 +675,15 @@ def _est_error(bags: List[dict]) -> dict:
         return {"n_bags": 0, "geo_mean_q": None}
     return {"n_bags": len(qs),
             "geo_mean_q": float(np.exp(np.mean(np.log(qs))))}
+
+
+def _expr_scalar_names(e) -> set:
+    """Scalar-relation names referenced by an annotation expression."""
+    if e is None or isinstance(e, (Num, AggRef)):
+        return set()
+    if isinstance(e, ScalarRef):
+        return {e.name}
+    return _expr_scalar_names(e.lhs) | _expr_scalar_names(e.rhs)
 
 
 def rule_without_star(rule: Rule) -> Rule:

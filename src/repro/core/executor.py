@@ -68,6 +68,14 @@ class Catalog:
         self._reordered: Dict[Tuple[str, Tuple[int, ...]], Trie] = {}
         self.scalars: Dict[str, object] = {}
         self.versions: Dict[str, int] = {}
+        # reorder-cache instrumentation: ``reorder_builds`` counts REAL
+        # index builds (a non-identity permutation materialized+rebuilt).
+        # The plan search costs candidates from base-trie profiles, so
+        # discarded candidates must build nothing — the engine surfaces
+        # these as ``reorder_cache.*`` in ``dispatch_summary()`` and the
+        # tests assert on them.
+        self.reorder_builds = 0
+        self.reorder_hits = 0
 
     def add(self, name: str, trie: Trie):
         self.tries[name] = trie
@@ -109,7 +117,12 @@ class Catalog:
         if key not in self._reordered:
             base = self.tries[base_name]
             attrs = [base.attrs[p] for p in perm]
-            self._reordered[key] = base.reorder(attrs)
+            built = base.reorder(attrs)
+            if built is not base:
+                self.reorder_builds += 1
+            self._reordered[key] = built
+        else:
+            self.reorder_hits += 1
         return self._reordered[key]
 
 

@@ -103,6 +103,7 @@ def set_engine_layout_mode(mode: str):
 
 def engine_store_for(trie, *, word_kernel: Optional[Callable] = None,
                      uint_kernel: Optional[Callable] = None,
+                     materialize_kernel: Optional[Callable] = None,
                      uint_max_len: int = 256,
                      counter=None,
                      cache_tag: str = "host",
@@ -147,6 +148,7 @@ def engine_store_for(trie, *, word_kernel: Optional[Callable] = None,
                                      decision=decision,
                                      word_kernel=word_kernel,
                                      uint_kernel=uint_kernel,
+                                     materialize_kernel=materialize_kernel,
                                      uint_max_len=uint_max_len)
         cache[key] = store
     if counter is not None and _ENGINE_LAYOUT_MODE == "set":
@@ -171,6 +173,10 @@ class HybridSetStore:
     # injected batched uint∩uint kernel ((offsets, neighbors, u, v) ->
     # counts) for short similar-cardinality pairs; None -> lockstep search
     uint_kernel: Optional[Callable] = None
+    # injected materializing bitset∩bitset kernel ((bitset, a_slots,
+    # b_slots) -> (pair_id, values, rank_a, rank_b)); None -> the host
+    # unpackbits extraction (intersect.bitset_intersect_materialize)
+    materialize_kernel: Optional[Callable] = None
     # pairs whose larger set exceeds this stay on the search path
     uint_max_len: int = 256
     # Counter-like sink recording which kernel handled each pair
@@ -181,6 +187,7 @@ class HybridSetStore:
               block_bits: int = SIMD_REGISTER_BITS,
               word_kernel: Optional[Callable] = None,
               uint_kernel: Optional[Callable] = None,
+              materialize_kernel: Optional[Callable] = None,
               uint_max_len: int = 256,
               decision: Optional[LayoutDecision] = None) -> "HybridSetStore":
         d = decision if decision is not None else decide_set_level(csr, threshold)
@@ -189,7 +196,7 @@ class HybridSetStore:
             bs = I.build_blocked_bitset(csr.offsets, csr.neighbors,
                                         d.dense_ids, csr.n, block_bits)
         return HybridSetStore(csr, d, bs, word_kernel, uint_kernel,
-                              uint_max_len)
+                              materialize_kernel, uint_max_len)
 
     def _bump(self, key: str, n: int):
         if self.counter is not None:
@@ -281,9 +288,12 @@ class HybridSetStore:
         pairs extract matches from the blocked-bitset layout, recovering
         positions via the per-block ``index`` field (paper Figure 6 — the
         seed ALWAYS fell back to the uint search here, leaving the hint
-        unused); every other cohort takes the uint search path.  Pair
-        counts land in the dispatch counters as
-        ``intersect.materialize_{bitset,uint}``.
+        unused); when a ``materialize_kernel`` is injected (the device
+        backend) that extraction runs as the Pallas AND+rank kernel
+        instead of the host unpackbits path.  Every other cohort takes
+        the uint search path.  Pair counts land in the dispatch counters
+        as ``intersect.materialize_{kernel,bitset,uint}`` — kernel vs
+        bitset distinguishes who executed the dense cohort.
         """
         u = np.asarray(u, np.int64)
         v = np.asarray(v, np.int64)
@@ -291,20 +301,25 @@ class HybridSetStore:
             self._bump("intersect.materialize_uint", len(u))
             return I.intersect_pairs_uint(self.csr.offsets,
                                           self.csr.neighbors, u, v)
+        if self.materialize_kernel is not None:
+            dense_mat, dense_key = (self.materialize_kernel,
+                                    "intersect.materialize_kernel")
+        else:
+            dense_mat, dense_key = (I.bitset_intersect_materialize,
+                                    "intersect.materialize_bitset")
         slot = self.bitset.slot_of
         both_dense = (slot[u] >= 0) & (slot[v] >= 0)
         if both_dense.all():
-            self._bump("intersect.materialize_bitset", len(u))
-            pid, vals, ra, rb = I.bitset_intersect_materialize(
-                self.bitset, slot[u], slot[v])
+            self._bump(dense_key, len(u))
+            pid, vals, ra, rb = dense_mat(self.bitset, slot[u], slot[v])
             return (pid, vals,
                     self.csr.offsets[u[pid]] + ra,
                     self.csr.offsets[v[pid]] + rb)
         di = np.flatnonzero(both_dense)
         si = np.flatnonzero(~both_dense)
-        self._bump("intersect.materialize_bitset", len(di))
+        self._bump(dense_key, len(di))
         self._bump("intersect.materialize_uint", len(si))
-        pid_d, vals_d, ra, rb = I.bitset_intersect_materialize(
+        pid_d, vals_d, ra, rb = dense_mat(
             self.bitset, slot[u[di]], slot[v[di]])
         pos_u_d = self.csr.offsets[u[di][pid_d]] + ra
         pos_v_d = self.csr.offsets[v[di][pid_d]] + rb

@@ -254,8 +254,8 @@ class PhysicalPlan:
 
 # ----------------------------------------------------------------- builder
 def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
-                        catalog, agm_memo: Optional[Dict] = None
-                        ) -> PhysicalPlan:
+                        catalog, agm_memo: Optional[Dict] = None,
+                        profile_tries: bool = True) -> PhysicalPlan:
     """Annotate the logical GHD plan into the physical operator DAG.
 
     ``catalog`` is the executor's relation catalog — the builder resolves
@@ -264,6 +264,15 @@ def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
     optional dict) memoizes the per-bag fractional-cover LPs across
     candidate lowerings of the SAME rule — the plan search lowers dozens
     of candidates whose bags repeat.
+
+    ``profile_tries=False`` profiles each atom from its BASE trie instead
+    of resolving ``catalog.reordered`` — candidate COSTING mode for the
+    plan search, so discarded candidates never build reordered indexes
+    in the engine-lifetime reorder cache (the base profile is the proxy
+    for every index order; exact for symmetric relations, an
+    approximation otherwise).  Routing hints are decided from
+    ``(resolved relation, permutation)`` keys in both modes, which is
+    exactly the reorder cache's identity.
     """
     from repro.core import statistics as S
     aggregate = plan.semiring is not None
@@ -283,15 +292,22 @@ def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
         children = [build_bag(c) for c in bp.children]
         accesses = tuple(AtomAccess.from_plan_atom(a, bp.var_order)
                          for a in bp.atoms)
-        atom_tries: List[Optional[object]] = []
+        atom_keys: List[Optional[Tuple]] = []
+        atom_arity: List[Optional[int]] = []
         atom_stats: List[Optional[TrieStats]] = []
         for acc in accesses:
             try:
-                t = catalog.reordered(acc.rel, acc.perm)
+                base = catalog.get(acc.rel)
             except KeyError:
-                t = None
-            atom_tries.append(t)
-            atom_stats.append(stats.stats_for(t) if t is not None else None)
+                atom_keys.append(None)
+                atom_arity.append(None)
+                atom_stats.append(None)
+                continue
+            atom_keys.append((catalog.resolve(acc.rel), acc.perm))
+            atom_arity.append(base.arity)
+            profiled = (catalog.reordered(acc.rel, acc.perm)
+                        if profile_tries else base)
+            atom_stats.append(stats.stats_for(profiled))
 
         child_inputs = []
         for cb in children:
@@ -343,7 +359,7 @@ def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
             if terminal:
                 routing, thr = _terminal_routing(
                     accesses, advancing_atoms, advancing_children,
-                    atom_tries, atom_stats, depth, stats)
+                    atom_keys, atom_arity, atom_stats, depth, stats)
                 set_stats = None
                 if advancing_atoms:
                     st = atom_stats[advancing_atoms[0]]
@@ -358,7 +374,7 @@ def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
             else:
                 ext_routing = _extend_routing(
                     accesses, advancing_atoms, advancing_children,
-                    atom_tries, depth)
+                    atom_keys, atom_arity, depth)
                 cost = S.extension_cost(rows_into_last, min_cand, max_cand,
                                         len(cons))
                 steps.append(reg(Extend(new_id(), frontier, cost, v,
@@ -509,27 +525,38 @@ def _bag_agm_bound(plan: QueryPlan, bp: BagPlan, catalog,
     return out
 
 
+def _pair_self_join(accesses, advancing_atoms, advancing_children,
+                    atom_keys, atom_arity, depth) -> bool:
+    """True when the advancing atoms are a binary self-join over the SAME
+    reordered arity-2 index at depth 1 — ``(resolved relation, perm)``
+    equality IS the reorder cache's identity, so this matches the trie
+    identity the runtime (``gj._fold_count`` / ``_extend_pair_store``)
+    checks, without requiring the index to be built."""
+    if advancing_children or len(advancing_atoms) != 2:
+        return False
+    i, j = advancing_atoms
+    a, b = accesses[i], accesses[j]
+    return not (atom_keys[i] is None or atom_keys[i] != atom_keys[j]
+                or atom_arity[i] != 2
+                or a.selections or b.selections
+                or depth[i] != 1 or depth[j] != 1)
+
+
 def _extend_routing(accesses, advancing_atoms, advancing_children,
-                    atom_tries, depth) -> str:
+                    atom_keys, atom_arity, depth) -> str:
     """Routing hint for a MATERIALIZING extension: "pair_store" when it is
     a binary self-join over the same reordered arity-2 trie at depth 1 —
     the condition under which ``HybridSetStore.intersect_materialize``
     can serve the expansion cohort-routed (bitset extraction for dense
     pairs) instead of the generic expand-and-probe search."""
-    if advancing_children or len(advancing_atoms) != 2:
-        return "search"
-    i, j = advancing_atoms
-    a, b = accesses[i], accesses[j]
-    ta, tb = atom_tries[i], atom_tries[j]
-    if (ta is None or ta is not tb or ta.arity != 2
-            or a.selections or b.selections
-            or depth[i] != 1 or depth[j] != 1):
-        return "search"
-    return "pair_store"
+    if _pair_self_join(accesses, advancing_atoms, advancing_children,
+                       atom_keys, atom_arity, depth):
+        return "pair_store"
+    return "search"
 
 
 def _terminal_routing(accesses, advancing_atoms, advancing_children,
-                      atom_tries, atom_stats, depth,
+                      atom_keys, atom_arity, atom_stats, depth,
                       stats: StatisticsCatalog):
     """Routing hint + statistics-driven layout threshold for the terminal
     fold.  The binary self-join pair-store path (Algorithm-3 cohorts,
@@ -538,14 +565,9 @@ def _terminal_routing(accesses, advancing_atoms, advancing_children,
     arity 2, no selections, folding at depth 1 — the condition
     ``gj._fold_count`` checks at run time, decided here once from the
     plan."""
-    if advancing_children or len(advancing_atoms) != 2:
-        return "search", None
-    i, j = advancing_atoms
-    a, b = accesses[i], accesses[j]
-    ta, tb = atom_tries[i], atom_tries[j]
-    if (ta is None or ta is not tb or ta.arity != 2
-            or a.selections or b.selections
-            or depth[i] != 1 or depth[j] != 1):
+    if not _pair_self_join(accesses, advancing_atoms, advancing_children,
+                           atom_keys, atom_arity, depth):
         return "search", None
     from repro.core.statistics import layout_threshold
+    i = advancing_atoms[0]
     return "pair_kernel", layout_threshold(atom_stats[i], stats.block_bits)

@@ -170,7 +170,17 @@ def search(base_plan: QueryPlan,
            use_ghd: bool = True,
            **bounds) -> SearchResult:
     """Cost every candidate against the CURRENT catalog statistics and
-    return the cheapest (strict argmin — ties keep the seed plan)."""
+    return the cheapest (strict argmin — ties keep the seed plan).
+
+    Candidates are lowered in PROFILE mode (``profile_tries=False``):
+    every atom is costed from its base trie's statistics, so losing
+    candidates leave NO reordered tries in the engine-lifetime reorder
+    cache (a K-candidate search used to build up to K×atoms indexes; wide
+    relations paid real materialize+sort work for plans that were then
+    discarded).  Only the WINNER is re-lowered in full mode — building
+    exactly the indexes execution is about to use anyway — which is also
+    the plan whose routing annotations the runtime consumes.
+    """
     cands = enumerate_candidates(base_plan, use_ghd=use_ghd, **bounds)
     agm_memo: dict = {}
     best = None
@@ -179,13 +189,16 @@ def search(base_plan: QueryPlan,
     baseline_cost = None
     for i, plan in enumerate(cands):
         pplan = plan_ir.build_physical_plan(plan, stats, catalog,
-                                            agm_memo=agm_memo)
+                                            agm_memo=agm_memo,
+                                            profile_tries=False)
         cost = plan_ir.plan_cost(pplan, bag_cache, catalog)
         if i == 0:
             baseline_cost = cost
         if best_cost is None or cost < best_cost:
-            best, best_cost, best_idx = (plan, pplan), cost, i
-    chosen, physical = best
+            best, best_cost, best_idx = plan, cost, i
+    chosen = best
+    physical = plan_ir.build_physical_plan(chosen, stats, catalog,
+                                           agm_memo=agm_memo)
     return SearchResult(chosen=chosen, physical=physical,
                         cost=float(best_cost),
                         baseline_cost=float(baseline_cost),

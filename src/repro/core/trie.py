@@ -172,6 +172,28 @@ class Trie:
         off = self.levels[depth].offsets
         return off[parent_pos], off[parent_pos + 1]
 
+    def edge_view(self):
+        """Flat ``(src, dst, annotation)`` column view of a binary trie.
+
+        This is the fixed-shape edge stream the device-resident recursion
+        loops (``core.recursion``) consume instead of rebuilding a delta
+        trie per round: uploaded once, it stays valid for every round
+        because seminaive/naive deltas are annotation VECTORS over the
+        vertex domain, not new tries.  Cached on the trie (identity-keyed
+        like :meth:`TrieLevel.device_values`), so repeated recursive
+        queries over the same relation pay the expansion once.
+        """
+        assert self.arity == 2, "edge_view is the binary fast path"
+        token = (id(self.levels[0].values), id(self.levels[1].values))
+        cached = self.__dict__.get("_edge_view")
+        if cached is not None and cached[0] == token:
+            return cached[1]
+        counts = np.diff(self.levels[1].offsets)
+        src = np.repeat(self.levels[0].values.astype(np.int64), counts)
+        view = (src, self.levels[1].values.astype(np.int64), self.annotation)
+        self._edge_view = (token, view)
+        return view
+
     def reorder(self, attrs: Sequence[str]) -> "Trie":
         """Re-index this trie under a different attribute order.
 

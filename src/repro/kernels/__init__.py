@@ -6,12 +6,15 @@ oracle used by the per-kernel allclose sweeps in tests/).
 
   bitset_intersect  paper §4.2 BITSET∩BITSET — VPU AND+popcount
   uint_intersect    paper §4.2 UINT∩UINT     — tile membership test
+  materialize       paper §4.2/Fig 6 materializing BITSET∩BITSET —
+                    VPU AND + MXU triangular-matmul rank extraction
   triangle_mm       beyond-paper: MXU masked-matmul triangle counting
   spmv_ell          PageRank SpMV over ELL-packed adjacency
   fm_interaction    recsys FM sum-square interaction
 """
 from repro.kernels.bitset_intersect import bitset_and_popcount  # noqa: F401
 from repro.kernels.fm_interaction import fm_interaction  # noqa: F401
+from repro.kernels.materialize import bitset_pair_materialize  # noqa: F401
 from repro.kernels.spmv_ell import spmv_ell  # noqa: F401
 from repro.kernels.triangle_mm import triangle_count_dense  # noqa: F401
 from repro.kernels.uint_intersect import uint_intersect_count  # noqa: F401

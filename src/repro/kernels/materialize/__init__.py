@@ -1,0 +1,1 @@
+from repro.kernels.materialize.ops import bitset_pair_materialize  # noqa: F401

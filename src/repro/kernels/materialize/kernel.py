@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: materializing bitset intersection (paper Section
+4.2 / Figure 6, the MATERIALIZE counterpart of ``bitset_intersect``).
+
+``HybridSetStore.intersect_materialize`` needs, for every matched block
+pair, (a) the AND-ed bit plane (which elements survive) and (b) each
+element's RANK within BOTH endpoint sets — the paper's Figure-6 ``index``
+machinery ("used to address associated values / next-trie-level
+pointers").  The seed computed all of it on host: ``np.unpackbits`` over
+the AND-ed words plus two full popcount+cumsum passes per endpoint.
+
+This kernel moves the arithmetic onto the device.  Inputs are the
+*bit-expanded* planes of the matched block rows (the uint32→bit unpack is
+a cheap XLA shift-and-mask in ops.py, so kernel operands stay lane-
+aligned: ``block_bits`` is a multiple of 128):
+
+  bits_a, bits_b : [P, B] int32 0/1   (B = block_bits)
+  tri            : [B, B] float32     strictly-upper-triangular ones
+                                      (tri[s, t] = 1 iff s < t)
+
+and one grid step emits, per (block_rows, B) tile:
+
+  band   = bits_a & bits_b                     (VPU AND)
+  rank_x = (bits_x . tri)                      (MXU matmul)
+
+The triangular matmul IS the exclusive prefix-popcount: rank_x[p, t] =
+number of set bits of endpoint x strictly below bit t — the classic
+TPU prefix-scan-as-matmul trick, one 128x128 systolic pass instead of a
+33-step word/bit cumsum.  The host keeps only the ragged extraction
+(``np.nonzero`` of the returned plane).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, SUBLANE, cdiv
+
+
+def _kernel(ba_ref, bb_ref, tri_ref, and_ref, ra_ref, rb_ref):
+    """One grid step: AND the bit planes, matmul both against ``tri``."""
+    ba = ba_ref[...]
+    bb = bb_ref[...]
+    and_ref[...] = ba & bb
+    tri = tri_ref[...]
+    ra = jnp.dot(ba.astype(jnp.float32), tri,
+                 preferred_element_type=jnp.float32)
+    rb = jnp.dot(bb.astype(jnp.float32), tri,
+                 preferred_element_type=jnp.float32)
+    ra_ref[...] = ra.astype(jnp.int32)
+    rb_ref[...] = rb.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def bitset_materialize_kernel(bits_a, bits_b, tri, *, block_rows: int = 256,
+                              interpret: bool = False):
+    """``pallas_call`` wrapper; P padded to block_rows, B a LANE multiple."""
+    p, b = bits_a.shape
+    assert bits_b.shape == (p, b) and tri.shape == (b, b)
+    assert p % block_rows == 0 and b % LANE == 0, (p, b)
+    assert block_rows % SUBLANE == 0
+    grid = (cdiv(p, block_rows),)
+    spec = pl.BlockSpec((block_rows, b), lambda i: (i, 0))
+    tri_spec = pl.BlockSpec((b, b), lambda i: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((p, b), jnp.int32)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec, tri_spec],
+        out_specs=(spec, spec, spec),
+        out_shape=(out_shape, out_shape, out_shape),
+        interpret=interpret,
+    )(bits_a, bits_b, tri)

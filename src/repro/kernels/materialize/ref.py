@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the materializing bitset-intersection kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bitset_materialize_ref(bits_a, bits_b):
+    """(band, rank_a, rank_b): AND-ed plane + per-endpoint exclusive
+    prefix popcounts along the bit axis."""
+    band = bits_a & bits_b
+    ra = jnp.cumsum(bits_a, axis=1) - bits_a
+    rb = jnp.cumsum(bits_b, axis=1) - bits_b
+    return band, ra.astype(jnp.int32), rb.astype(jnp.int32)

@@ -201,10 +201,18 @@ def test_materializing_intersections_cohort_routed(backend):
     res = eng.query(W.TRIANGLE_LIST)
     st_ = eng.dispatch_summary()
     assert st_.get("extend.pair_materialize_calls", 0) >= 1, st_
-    assert (st_.get("intersect.materialize_bitset", 0)
-            + st_.get("intersect.materialize_uint", 0)) > 0, st_
-    # dense graph, small id range -> the bitset cohort must have fired
-    assert st_.get("intersect.materialize_bitset", 0) > 0, st_
+    dense_pairs = (st_.get("intersect.materialize_bitset", 0)
+                   + st_.get("intersect.materialize_kernel", 0))
+    assert dense_pairs + st_.get("intersect.materialize_uint", 0) > 0, st_
+    # dense graph, small id range -> the bitset cohort must have fired;
+    # under the device backend it must be the Pallas materialize kernel,
+    # on numpy the host extraction (the oracle)
+    assert dense_pairs > 0, st_
+    if backend == "device":
+        assert st_.get("intersect.materialize_kernel", 0) > 0, st_
+        assert st_.get("intersect.materialize_bitset", 0) == 0, st_
+    else:
+        assert st_.get("intersect.materialize_kernel", 0) == 0, st_
     got = set(zip(res.columns["x"].tolist(), res.columns["y"].tolist(),
                   res.columns["z"].tolist()))
     want = {(x, y, z)

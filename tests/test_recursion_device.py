@@ -1,0 +1,370 @@
+"""Device-resident recursion (the PR-5 layer).
+
+Locks the acceptance behaviour:
+
+  * seminaive SSSP and naive PageRank through the DATALOG ENGINE run as
+    one jitted device loop under ``DeviceBackend`` — zero host delta-trie
+    rebuilds (counter-proven) — with exact result parity against the
+    ``NumpyBackend`` host loop (the differential oracle);
+  * randomized weighted graphs (self-loops, zero-weight edges,
+    disconnected vertices, single-node graphs) keep that parity;
+  * the Pallas materialize kernel matches the host bitset extraction
+    bit-for-bit and is what the device backend dispatches;
+  * plan-search candidate costing builds NO reordered indexes for
+    discarded candidates (``reorder_cache.builds``);
+  * ``recursion.fixpoint``'s tolerance path checks convergence in blocks
+    (device-side diffs, one host sync per block) without changing the
+    returned iterate;
+  * ``sssp_np`` terminates on pathological inputs (tight Bellman–Ford
+    bound + negative-cycle detection).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import random_undirected_graph
+from repro.core import workload as W
+from repro.core.engine import Engine
+
+ALIASES = W.ALIASES
+
+
+def make_engine(src, dst, backend, annotation=None, **kw):
+    eng = Engine(backend=backend, **kw)
+    eng.load_edges("Edge", src, dst, annotation=annotation)
+    for a in ALIASES:
+        eng.alias(a, "Edge")
+    return eng
+
+
+def assert_same_result(r1, r2, exact_ann=False):
+    assert r1.vars == r2.vars
+    for v in r1.vars:
+        np.testing.assert_array_equal(r1.columns[v], r2.columns[v])
+    if r1.annotation is None:
+        assert r2.annotation is None
+    elif exact_ann:
+        np.testing.assert_array_equal(np.asarray(r1.annotation),
+                                      np.asarray(r2.annotation))
+    else:
+        np.testing.assert_allclose(np.asarray(r1.annotation),
+                                   np.asarray(r2.annotation),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def random_weighted_digraph(seed: int, n: int):
+    """Directed multigraph with the pathological features the device loop
+    must survive: self-loops, zero-weight edges, duplicate edges,
+    disconnected vertices (ids never drawn). Integer-valued float32
+    weights keep min-plus arithmetic exact on both paths."""
+    r = np.random.default_rng(seed)
+    m = int(r.integers(0, 3 * n + 1))
+    src = r.integers(0, n, m)
+    dst = r.integers(0, n, m)
+    w = r.integers(0, 4, m).astype(np.float32)
+    return src, dst, w
+
+
+# ------------------------------------------------------ engine-loop parity
+def test_sssp_device_loop_parity_and_counters():
+    src, dst, _ = random_undirected_graph(28, 0.25, 42)
+    q = W.sssp_program(int(src[0]))
+    e1 = make_engine(src, dst, "numpy")
+    e2 = make_engine(src, dst, "device")
+    assert_same_result(e1.query(q), e2.query(q), exact_ann=True)
+    st1, st2 = e1.dispatch_summary(), e2.dispatch_summary()
+    # the oracle rebuilt host tries every round ...
+    assert st1["recursion.host_trie_rebuilds"] >= 2
+    assert st1.get("recursion.device_rounds", 0) == 0
+    # ... the device loop rebuilt NONE (not merely "none after round 1")
+    assert st2.get("recursion.host_trie_rebuilds", 0) == 0, st2
+    assert st2["recursion.device_fixpoints"] == 1
+    assert st2["recursion.device_rounds"] >= 2
+    assert st2["recursion.device_rounds"] == st1["recursion.host_rounds"]
+
+
+def test_pagerank_device_loop_parity_and_counters():
+    src, dst, _ = random_undirected_graph(24, 0.3, 23)
+    q = W.pagerank_program(iters=8)
+    e1 = make_engine(src, dst, "numpy")
+    e2 = make_engine(src, dst, "device")
+    assert_same_result(e1.query(q), e2.query(q))
+    st2 = e2.dispatch_summary()
+    assert st2.get("recursion.host_trie_rebuilds", 0) == 0, st2
+    assert st2["recursion.device_rounds"] == 8
+    md = [m for m in e2.plan_metadata() if "recursion" in m]
+    assert md and md[0]["recursion"] == {
+        "mode": "device", "strategy": "naive", "rounds": 8}
+
+
+def test_pagerank_tolerance_device_convergence_on_device():
+    """Float-differential convergence (c=eps) must agree round-for-round:
+    the device loop checks the diff inside the while_loop, the host loop
+    on host — same data, same rounds, same result."""
+    src, dst, _ = random_undirected_graph(20, 0.3, 3)
+    q = ("N(;w:int) :- Edge(x,y); w=<<COUNT(x)>>.\n"
+         "InvDeg(x;y:float) :- Edge(x,z); y=1.0/<<COUNT(z)>>.\n"
+         "PageRank(x;y:float) :- Edge(x,z); y=1.0/N.\n"
+         "PageRank(x;y:float)*[c=0.0001] :- Edge(x,z),PageRank(z),"
+         "InvDeg(z); y=0.15/N+0.85*<<SUM(z)>>.")
+    e1 = make_engine(src, dst, "numpy")
+    e2 = make_engine(src, dst, "device")
+    assert_same_result(e1.query(q), e2.query(q))
+    assert (e2.dispatch_summary()["recursion.device_rounds"]
+            == e1.dispatch_summary()["recursion.host_rounds"])
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 24))
+def test_seminaive_parity_on_random_weighted_graphs(seed, n):
+    """Hypothesis sweep: weighted MIN-recursion (annotations ride the
+    edge relation) over directed multigraphs with self-loops, zero
+    weights, disconnected and single-node cases — device loop must equal
+    the numpy host loop EXACTLY."""
+    src, dst, w = random_weighted_digraph(seed, n)
+    source = int(src[0]) if len(src) else 0
+    q = (f"D(x;y:float) :- Edge({source},x); y=1.\n"
+         "D(x;y:float)* :- Edge(u,x),D(u); y=<<MIN(u)>>.")
+    r1 = make_engine(src, dst, "numpy", annotation=w).query(q)
+    e2 = make_engine(src, dst, "device", annotation=w)
+    r2 = e2.query(q)
+    assert_same_result(r1, r2, exact_ann=True)
+    assert e2.dispatch_summary().get("recursion.host_trie_rebuilds", 0) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 20),
+       iters=st.integers(1, 6))
+def test_naive_parity_on_random_graphs(seed, n, iters):
+    """Hypothesis sweep for the naive (SUM) loop: PageRank over random
+    directed multigraphs, fixed iteration counts."""
+    src, dst, _w = random_weighted_digraph(seed, n)
+    if len(src) == 0:
+        return  # PageRank base rules need at least one edge
+    q = W.pagerank_program(iters=iters)
+    r1 = make_engine(src, dst, "numpy").query(q)
+    e2 = make_engine(src, dst, "device")
+    r2 = e2.query(q)
+    assert_same_result(r1, r2)
+    assert e2.dispatch_summary().get("recursion.host_trie_rebuilds", 0) == 0
+
+
+def test_single_node_self_loop_graph():
+    src = np.array([0]); dst = np.array([0])
+    q = W.sssp_program(0)
+    r1 = make_engine(src, dst, "numpy").query(q)
+    r2 = make_engine(src, dst, "device").query(q)
+    assert_same_result(r1, r2, exact_ann=True)
+
+
+# ------------------------------------------------- fallbacks & escape hatch
+def test_escape_hatch_pins_host_loop(monkeypatch):
+    src, dst, _ = random_undirected_graph(20, 0.25, 7)
+    q = W.sssp_program(int(src[0]))
+    ref = make_engine(src, dst, "numpy").query(q)
+    # constructor flag
+    e1 = make_engine(src, dst, "device", device_recursion=False)
+    assert_same_result(ref, e1.query(q), exact_ann=True)
+    assert e1.dispatch_summary()["recursion.host_trie_rebuilds"] > 0
+    # environment variable
+    monkeypatch.setenv("REPRO_DEVICE_RECURSION", "off")
+    e2 = make_engine(src, dst, "device")
+    assert_same_result(ref, e2.query(q), exact_ann=True)
+    assert e2.dispatch_summary()["recursion.host_trie_rebuilds"] > 0
+    monkeypatch.delenv("REPRO_DEVICE_RECURSION")
+    e3 = make_engine(src, dst, "device")
+    assert_same_result(ref, e3.query(q), exact_ann=True)
+    assert e3.dispatch_summary().get("recursion.host_trie_rebuilds", 0) == 0
+
+
+def test_non_spmv_shape_falls_back_to_host_loop():
+    """A seminaive rule with a unary extra atom is outside the SpMV shape
+    the device loop handles: the device engine must fall back to the host
+    loop and stay parity-exact."""
+    src, dst, _ = random_undirected_graph(18, 0.3, 11)
+    allowed = np.unique(src)[::2].astype(np.int64)
+    q = (f"SSSP(x;y:int) :- Edge({int(src[0])},x); y=1.\n"
+         "SSSP(x;y:int)* :- Edge(w,x),SSSP(w),Allowed(w); y=<<MIN(w)>>+1.")
+    engines = []
+    for b in ("numpy", "device"):
+        eng = make_engine(src, dst, b)
+        eng.load_table("Allowed", [allowed])
+        engines.append((eng, eng.query(q)))
+    (e1, r1), (e2, r2) = engines
+    assert_same_result(r1, r2, exact_ann=True)
+    assert e2.dispatch_summary()["recursion.host_rounds"] > 0
+    assert e2.dispatch_summary().get("recursion.device_fixpoints", 0) == 0
+
+
+# ------------------------------------------------------ materialize kernel
+def _dense_bitset(seed=11, n=60, p=0.3, block_bits=256):
+    from repro.core import intersect as I
+    from repro.core.layouts import decide_set_level
+    from repro.core.trie import CSRGraph
+    src, dst, _ = random_undirected_graph(n, p, seed)
+    csr = CSRGraph.from_edges(src, dst)
+    d = decide_set_level(csr, threshold=4096)
+    assert len(d.dense_ids) >= 2
+    bs = I.build_blocked_bitset(csr.offsets, csr.neighbors, d.dense_ids,
+                                csr.n, block_bits)
+    return csr, d, bs
+
+
+def test_materialize_kernel_matches_host_extraction():
+    from repro.core import intersect as I
+    from repro.kernels.materialize.ops import bitset_pair_materialize
+    csr, d, bs = _dense_bitset()
+    rng = np.random.default_rng(3)
+    u = d.dense_ids[rng.integers(0, len(d.dense_ids), 40)]
+    v = d.dense_ids[rng.integers(0, len(d.dense_ids), 40)]
+    want = I.bitset_intersect_materialize(bs, bs.slot_of[u], bs.slot_of[v])
+    got = bitset_pair_materialize(bs, bs.slot_of[u], bs.slot_of[v],
+                                  interpret=True)
+    assert len(got[0]) > 0
+    for w_, g_, nm in zip(want, got, ("pair_id", "vals", "rank_a", "rank_b")):
+        np.testing.assert_array_equal(g_, w_, err_msg=nm)
+    # empty input
+    empty = bitset_pair_materialize(bs, bs.slot_of[u][:0], bs.slot_of[v][:0],
+                                    interpret=True)
+    assert all(len(x) == 0 for x in empty)
+
+
+def test_materialize_kernel_matches_ref():
+    import jax.numpy as jnp
+    from repro.kernels.materialize.kernel import bitset_materialize_kernel
+    from repro.kernels.materialize.ops import _tri
+    from repro.kernels.materialize.ref import bitset_materialize_ref
+    rng = np.random.default_rng(0)
+    bits_a = jnp.asarray(rng.integers(0, 2, (256, 256)).astype(np.int32))
+    bits_b = jnp.asarray(rng.integers(0, 2, (256, 256)).astype(np.int32))
+    got = bitset_materialize_kernel(bits_a, bits_b, _tri(256),
+                                    interpret=True)
+    want = bitset_materialize_ref(bits_a, bits_b)
+    for g, w_, nm in zip(got, want, ("band", "rank_a", "rank_b")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w_),
+                                      err_msg=nm)
+
+
+def test_device_backend_dispatches_materialize_kernel():
+    src, dst, _ = random_undirected_graph(40, 0.3, 3)
+    eng = make_engine(src, dst, "device")
+    eng.query(W.TRIANGLE_LIST)
+    st_ = eng.dispatch_summary()
+    assert st_.get("intersect.materialize_kernel", 0) > 0, st_
+    assert st_.get("intersect.materialize_bitset", 0) == 0, st_
+
+
+# ------------------------------------------------------ reorder-cache bugfix
+def test_plan_search_losers_build_no_reorder_indexes():
+    """ROADMAP open item closed: candidate costing profiles from the BASE
+    trie, so discarded plans leave no reordered tries in the
+    engine-lifetime reorder cache — on data where the old per-candidate
+    ``catalog.reordered`` provably built one."""
+    from repro.core import plan_ir, plan_search
+    from repro.core.datalog import parse
+    rng = np.random.default_rng(5)
+    src = rng.integers(0, 50, 400)
+    dst = rng.integers(0, 50, 400)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+
+    eng = make_engine(src, dst, "numpy", plan_search=True)
+    rule = parse(W.LOLLIPOP).rules[0]
+    plan = eng._compile(rule)
+    sr = plan_search.search(plan, eng.stats_catalog, eng.catalog,
+                            bag_cache=eng.bag_cache)
+    assert sr.candidates > 1
+    assert eng.catalog.reorder_builds == 0, \
+        "candidate costing built reorder indexes"
+    # teeth: FULL-mode lowering of every candidate does build indexes on
+    # this (directed) data — the regression the profile mode prevents
+    for cand in plan_search.enumerate_candidates(plan):
+        plan_ir.build_physical_plan(cand, eng.stats_catalog, eng.catalog)
+    assert eng.catalog.reorder_builds > 0
+
+
+@pytest.mark.parametrize("backend", ["numpy", "device"])
+def test_reorder_counter_in_dispatch_summary(backend):
+    src, dst, _ = random_undirected_graph(20, 0.3, 9)
+    eng = make_engine(src, dst, backend)
+    eng.query(W.TRIANGLE_COUNT)
+    st_ = eng.dispatch_summary()
+    assert "reorder_cache.builds" in st_ and "reorder_cache.hits" in st_
+
+
+# ------------------------------------------------------------ fixpoint syncs
+def test_fixpoint_tolerance_batched_syncs_and_identical_result():
+    import jax.numpy as jnp
+    from repro.core.backend import DeviceBackend
+    from repro.core.recursion import fixpoint
+    b = DeviceBackend()
+    c = jnp.array([1.0, 2.0, 3.0, 4.0])
+
+    def step(x):
+        return 0.5 * (x + c)
+
+    got = fixpoint(step, jnp.zeros(4), tol=1e-5, backend=b)
+    assert b.stats["fixpoint.host_syncs"] >= 1
+    assert b.stats["fixpoint.host_syncs"] < b.stats["fixpoint.steps"]
+    # per-iteration reference: identical returned iterate
+    x = jnp.zeros(4)
+    steps = 0
+    for _ in range(10_000):
+        nx = step(x)
+        steps += 1
+        if float(jnp.max(jnp.abs(nx - x))) <= 1e-5:
+            x = nx
+            break
+        x = nx
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+    assert b.stats["fixpoint.steps"] == steps
+
+
+def test_fixpoint_fixed_iters_counts_steps():
+    from repro.core.backend import NumpyBackend
+    from repro.core.recursion import fixpoint
+    b = NumpyBackend()
+    out = fixpoint(lambda x: x + 1.0, np.float32(0.0), iters=5, backend=b)
+    assert float(out) == 5.0
+    assert b.stats["fixpoint.steps"] == 5
+    assert b.stats.get("fixpoint.host_syncs", 0) == 0
+
+
+# ------------------------------------------------------------ sssp_np oracle
+def test_sssp_np_negative_cycle_raises():
+    from repro.core.recursion import sssp_np
+    from repro.core.trie import CSRGraph
+    csr = CSRGraph.from_edges([0, 1, 2], [1, 2, 0], n=3)
+    w = np.array([1.0, -2.0, 0.5], np.float32)
+    with pytest.raises(ValueError, match="negative cycle"):
+        sssp_np(csr, 0, w)
+
+
+def test_sssp_np_line_graph_needs_n_minus_1_rounds():
+    from repro.core.recursion import sssp_np
+    from repro.core.trie import CSRGraph
+    n = 12
+    line = CSRGraph.from_edges(np.arange(n - 1), np.arange(1, n), n=n)
+    np.testing.assert_array_equal(sssp_np(line, 0),
+                                  np.arange(n, dtype=np.float32))
+
+
+def test_sssp_np_negative_weights_without_cycle_ok():
+    from repro.core.recursion import sssp_np
+    from repro.core.trie import CSRGraph
+    # DAG with a negative (non-cycle) edge; weights are CSR-ordered:
+    # (0,1)=2, (0,2)=-1.5, (1,2)=1  ->  d(2) = min(-1.5, 2+1)
+    csr = CSRGraph.from_edges([0, 1, 0], [1, 2, 2], n=3)
+    w = np.array([2.0, -1.5, 1.0], np.float32)
+    d = sssp_np(csr, 0, w)
+    np.testing.assert_allclose(d, [0.0, 2.0, -1.5])
+
+
+def test_sssp_np_still_matches_device_sssp():
+    from repro.core.recursion import sssp, sssp_np
+    from repro.core.trie import CSRGraph
+    src, dst, _ = random_undirected_graph(30, 0.15, 29)
+    csr = CSRGraph.from_edges(src, dst)
+    np.testing.assert_array_equal(sssp_np(csr, int(src[0])),
+                                  np.asarray(sssp(csr, int(src[0]))))
