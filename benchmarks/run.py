@@ -7,7 +7,11 @@ prints ``name,us_per_call,derived`` CSV rows (paper protocol: 7 runs,
 trimmed mean) and writes ``BENCH_results.json`` — machine-readable
 per-query × per-backend wall times plus the backend's kernel-dispatch
 counters, so regressions in *where* intersections execute are visible,
-not just regressions in time.  Queries whose cost-based plan search
+not just regressions in time.  The suite runs with the static
+verification layer fully on (``verify_plans`` default + dispatch
+``sanitize``), and records the ``analysis.*`` counters — in the
+exact-compared dispatch deltas and as per-row engine-lifetime totals —
+so the baseline gate also proves verification stayed on.  Queries whose cost-based plan search
 (``core.plan_search``) picked a non-appearance-order plan are ALSO timed
 with ``REPRO_PLAN_SEARCH=off`` semantics, recording the wall-time win
 and result parity against the seed plan in the artifact.
@@ -105,7 +109,11 @@ def run_backend_suite(smoke: bool) -> list:
     out = []
     digests = {}
     for backend in ("numpy", "device"):
-        eng = Engine(backend=backend)
+        # sanitize=True: every suite execution runs the dispatch
+        # sanitizer (repro.analysis.kernel_check.check_dispatch), and the
+        # analysis.* counters land in each row's exact-compared dispatch
+        # delta — the baseline gate thereby proves verification stayed on
+        eng = Engine(backend=backend, sanitize=True)
         eng.load_edges("Edge", src, g.neighbors)
         for al in ALIASES:
             eng.alias(al, "Edge")
@@ -143,6 +151,14 @@ def run_backend_suite(smoke: bool) -> list:
                 "parity": bool(np.isclose(digest, digests[qname],
                                           rtol=1e-5, atol=1e-6)),
                 "dispatch": dispatch,
+                # cumulative static-verification counters (plans and
+                # search candidates validated, sanitize assertions run):
+                # the per-rep delta above can miss plans_verified on
+                # warm physical-plan-cache reps, so the artifact also
+                # carries the engine-lifetime totals
+                "analysis": {k: int(v)
+                             for k, v in sorted(eng.backend.stats.items())
+                             if k.startswith("analysis.")},
                 # optimizer choices per executed rule: fhw, attribute
                 # order, per-level layout routing + threshold, estimated
                 # vs actual cardinalities — so plan-quality regressions

@@ -1,0 +1,33 @@
+"""Static verification layer (three passes, run before/around execution).
+
+EmptyHeaded's bet is that a high-level query compiles into provably
+correct low-level plans; this package makes the "provably" part checkable
+instead of vibes:
+
+  * :mod:`repro.analysis.plan_verify` — structural validator over every
+    lowered :mod:`repro.core.plan_ir` DAG (schema/attribute-order
+    consistency, connector retention, AGM-capped estimates, routing and
+    bag-cache key well-formedness).  Wired into ``Engine`` behind
+    ``verify_plans`` (default ON; ``REPRO_VERIFY_PLANS=off`` escape
+    hatch) and into ``plan_search`` so every candidate is validated.
+  * :mod:`repro.analysis.sync_lint` — AST pass over
+    ``src/repro/{core,kernels}`` flagging host-transfer hazards inside
+    jit/Pallas-traced code, gated against the committed baseline
+    ``sync_baseline.json`` so ROADMAP item 3 ("kill the last host
+    syncs") progress is monotone.
+  * :mod:`repro.analysis.kernel_check` — per-Pallas-kernel contract
+    checker (BlockSpec/grid/out_shape/dtype vs the ``ref.py`` oracle,
+    index-map bounds), plus the ``REPRO_SANITIZE=1`` runtime dispatch
+    assertions consumed by ``Engine``.
+"""
+from __future__ import annotations
+
+from repro.analysis.plan_verify import (PlanVerificationError, PlanViolation,
+                                        assert_valid, verify_physical_plan)
+
+__all__ = [
+    "PlanVerificationError",
+    "PlanViolation",
+    "assert_valid",
+    "verify_physical_plan",
+]

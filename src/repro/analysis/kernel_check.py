@@ -1,0 +1,343 @@
+"""Pallas kernel contract checker + the ``REPRO_SANITIZE`` dispatch mode.
+
+Static pass (:func:`check_all` / :func:`check_contract`): each kernel
+package under ``repro.kernels`` that participates in engine dispatch
+(``uint_intersect``, ``bitset_intersect``, ``materialize``) publishes a
+``CONTRACT`` in its ``ops.py`` — representative inputs, the dispatch
+entry point, and the package's pure-jnp ``ref.py`` oracle.  The checker
+clears the jit cache and runs the entry with ``pl.pallas_call``
+instrumented, so every launch is captured at trace time with its
+declared geometry, then cross-checks:
+
+  * grid is a tuple of positive ints and every ``BlockSpec`` block shape
+    tiles its operand exactly (the kernels pad to tile geometry in
+    ``ops.py`` — a partial block reaching ``pallas_call`` is a bug);
+  * every index map stays in bounds over the WHOLE grid, and the output
+    index maps jointly cover every output block (an uncovered block is
+    silently-uninitialized memory);
+  * the entry's output pytree matches ``jax.eval_shape`` of the oracle —
+    same structure, shapes, dtypes — and the interpret-mode values match
+    the oracle numerically.
+
+Runtime pass (:func:`check_dispatch`, wired into ``Engine._execute``
+behind ``REPRO_SANITIZE=1``): after each rule executes, assert the
+backend's dispatch-counter DELTA matches what the validated physical
+plan predicted — pair-cohort kernels only fire when some bag routed to
+them, and the host-sync budget (ROADMAP item 3: at most one
+``device_get`` per fused extension on the device backend, one per probe
+atom on the numpy oracle) holds.  Violations raise
+:class:`SanitizeError` — a counter mismatch means the plan annotations
+and the runtime disagreed about what actually ran.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+import math
+
+import numpy as np
+
+from repro.core.plan_ir import Extend, PhysicalPlan, TerminalFold
+
+
+class KernelContractError(AssertionError):
+    """A Pallas kernel's declared geometry contradicts its oracle."""
+
+
+class SanitizeError(AssertionError):
+    """Runtime dispatch counters contradict the validated plan."""
+
+
+# ------------------------------------------------------- pallas capture
+@dataclasses.dataclass
+class CapturedCall:
+    kernel_name: str
+    grid: tuple
+    in_specs: list
+    out_specs: list
+    out_shape: list          # ShapeDtypeStructs
+    operands: list           # ShapeDtypeStructs of the actual inputs
+
+
+def _as_tuple(x) -> tuple:
+    if x is None:
+        return ()
+    if isinstance(x, (list, tuple)):
+        return tuple(x)
+    return (x,)
+
+
+def _kernel_label(kernel) -> str:
+    return getattr(kernel, "__name__",
+                   getattr(getattr(kernel, "func", None), "__name__",
+                           repr(kernel)))
+
+
+@contextlib.contextmanager
+def capture_pallas_calls():
+    """Instrument ``pl.pallas_call`` so every launch records its declared
+    geometry and actual operand avals; yields the record list."""
+    import jax.experimental.pallas as pl
+    real = pl.pallas_call
+    records: list[CapturedCall] = []
+
+    def wrapper(kernel, **kw):
+        inner = real(kernel, **kw)
+
+        def call(*operands):
+            records.append(CapturedCall(
+                kernel_name=_kernel_label(kernel),
+                grid=_as_tuple(kw.get("grid")),
+                in_specs=list(_as_tuple(kw.get("in_specs"))),
+                out_specs=list(_as_tuple(kw.get("out_specs"))),
+                out_shape=list(_as_tuple(kw.get("out_shape"))),
+                operands=[_aval(o) for o in operands]))
+            return inner(*operands)
+
+        return call
+
+    pl.pallas_call = wrapper
+    try:
+        yield records
+    finally:
+        pl.pallas_call = real
+
+
+def _aval(x):
+    import jax
+    return jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype
+                                if not hasattr(x, "dtype") else x.dtype)
+
+
+# -------------------------------------------------------- geometry checks
+_MAX_ENUM_GRID = 4096
+
+
+def _check_spec(name: str, what: str, spec, aval, grid: tuple,
+                covered: set | None = None) -> None:
+    block = getattr(spec, "block_shape", None)
+    index_map = getattr(spec, "index_map", None)
+    if block is None or index_map is None:
+        raise KernelContractError(
+            f"{name}: {what} BlockSpec exposes no block_shape/index_map")
+    shape = tuple(aval.shape)
+    if len(block) != len(shape):
+        raise KernelContractError(
+            f"{name}: {what} block {block} rank-mismatches operand "
+            f"{shape}")
+    for d, (b, s) in enumerate(zip(block, shape)):
+        if not (isinstance(b, int) and b >= 1):
+            raise KernelContractError(
+                f"{name}: {what} block dim {d} is {b!r}")
+        if s % b != 0:
+            raise KernelContractError(
+                f"{name}: {what} block {block} does not tile operand "
+                f"{shape} (ops.py must pad to tile geometry)")
+    nblocks = tuple(s // b for b, s in zip(block, shape))
+    if math.prod(grid) > _MAX_ENUM_GRID:
+        # too large to enumerate — check the extreme corners only
+        points = itertools.product(*[(0, g - 1) for g in grid])
+    else:
+        points = itertools.product(*[range(g) for g in grid])
+    for pt in points:
+        idx = index_map(*pt)
+        idx = idx if isinstance(idx, tuple) else (idx,)
+        if len(idx) != len(shape):
+            raise KernelContractError(
+                f"{name}: {what} index map returned rank-{len(idx)} index "
+                f"for rank-{len(shape)} operand")
+        for d, (i, nb) in enumerate(zip(idx, nblocks)):
+            i = int(i)
+            if not 0 <= i < nb:
+                raise KernelContractError(
+                    f"{name}: {what} index map out of bounds at grid {pt}: "
+                    f"dim {d} block index {i} not in [0, {nb})")
+        if covered is not None:
+            covered.add(tuple(int(i) for i in idx))
+    if covered is not None and math.prod(grid) <= _MAX_ENUM_GRID:
+        want = set(itertools.product(*[range(n) for n in nblocks]))
+        missing = want - covered
+        if missing:
+            raise KernelContractError(
+                f"{name}: {what} index map never writes block(s) "
+                f"{sorted(missing)[:4]} — uninitialized output")
+
+
+def check_captured(name: str, rec: CapturedCall) -> None:
+    if not rec.grid or not all(isinstance(g, int) and g >= 1
+                               for g in rec.grid):
+        raise KernelContractError(f"{name}: bad grid {rec.grid!r}")
+    if len(rec.in_specs) != len(rec.operands):
+        raise KernelContractError(
+            f"{name}: {len(rec.in_specs)} in_specs for "
+            f"{len(rec.operands)} operands")
+    for i, (spec, aval) in enumerate(zip(rec.in_specs, rec.operands)):
+        _check_spec(name, f"in_specs[{i}] ({rec.kernel_name})", spec, aval,
+                    rec.grid)
+    if len(rec.out_specs) != len(rec.out_shape):
+        raise KernelContractError(
+            f"{name}: {len(rec.out_specs)} out_specs for "
+            f"{len(rec.out_shape)} outputs")
+    for i, (spec, aval) in enumerate(zip(rec.out_specs, rec.out_shape)):
+        _check_spec(name, f"out_specs[{i}] ({rec.kernel_name})", spec,
+                    aval, rec.grid, covered=set())
+
+
+# --------------------------------------------------------- contract check
+def contracts() -> list:
+    """The dispatch-participating kernel packages' CONTRACT records."""
+    from repro.kernels.bitset_intersect import ops as bitset_ops
+    from repro.kernels.materialize import ops as materialize_ops
+    from repro.kernels.uint_intersect import ops as uint_ops
+    return [uint_ops.CONTRACT, bitset_ops.CONTRACT,
+            materialize_ops.CONTRACT]
+
+
+def check_contract(contract: dict) -> int:
+    """Verify one kernel package; returns the number of captured
+    launches (>= 1, or the entry silently skipped the kernel)."""
+    import jax
+
+    name = contract["name"]
+    inputs = contract["make_inputs"]()
+    # force a fresh trace: the entries are jitted, and a cache hit would
+    # skip the Python body (and with it the pallas_call capture).
+    # NB ``jax.disable_jit()`` is NOT an option — pallas_call's eager impl
+    # re-binds through jit and recurses forever when jit is a no-op.
+    jax.clear_caches()
+    with capture_pallas_calls() as records:
+        out = contract["entry"](*inputs)
+    if not records:
+        raise KernelContractError(
+            f"{name}: entry launched no Pallas kernel on the contract "
+            f"inputs — the capture saw nothing to check")
+    for rec in records:
+        check_captured(name, rec)
+    # oracle signature: same pytree structure, shapes, dtypes
+    expect = jax.eval_shape(contract["ref"], *inputs)
+    got_flat = _as_tuple(out if isinstance(out, (list, tuple)) else (out,))
+    exp_flat = _as_tuple(expect if isinstance(expect, (list, tuple))
+                         else (expect,))
+    if len(got_flat) != len(exp_flat):
+        raise KernelContractError(
+            f"{name}: entry returns {len(got_flat)} arrays, oracle "
+            f"{len(exp_flat)}")
+    for i, (g, e) in enumerate(zip(got_flat, exp_flat)):
+        if tuple(np.shape(g)) != tuple(e.shape) or \
+                np.asarray(g).dtype != np.dtype(e.dtype):
+            raise KernelContractError(
+                f"{name}: output[{i}] is {np.shape(g)}/{np.asarray(g).dtype}"
+                f", oracle says {tuple(e.shape)}/{np.dtype(e.dtype)}")
+    # and interpret-mode values match the oracle numerically (these are
+    # exact integer kernels — no tolerance)
+    ref_out = contract["ref"](*inputs)
+    ref_flat = _as_tuple(ref_out if isinstance(ref_out, (list, tuple))
+                         else (ref_out,))
+    for i, (g, r) in enumerate(zip(got_flat, ref_flat)):
+        if not np.array_equal(np.asarray(g), np.asarray(r)):
+            raise KernelContractError(
+                f"{name}: output[{i}] differs from the ref.py oracle")
+    return len(records)
+
+
+def check_all() -> dict:
+    """Run every registered kernel contract; returns name -> #launches."""
+    return {c["name"]: check_contract(c) for c in contracts()}
+
+
+# ------------------------------------------------------- runtime sanitize
+def check_dispatch(pplan: PhysicalPlan, delta: dict, metrics: dict,
+                   backend_name: str) -> None:
+    """Assert the dispatch-counter ``delta`` of one rule execution is
+    consistent with the validated plan's routing annotations.
+
+    Only SOUND assertions — ones no legitimate execution can trip:
+
+      * no bag routes a fold to ``pair_kernel``  ⇒  zero
+        ``fold.pair_count_calls`` (the binary-cohort kernels must not
+        fire on plans that never routed to them);
+      * additionally no ``pair_store`` extension  ⇒  zero
+        ``extend.pair_materialize_calls``;
+      * host-sync budget: the device backend syncs at most once per
+        fused extension call; the numpy oracle at most once per probe
+        atom per call (``TerminalFold``'s general path and the final
+        top-down join also call ``extend`` internally, so the budget is
+        per observed ``extend.calls``, not per planned step);
+      * an executed bag (per-bag ``metrics`` carries ``level_actuals``
+        only for bags actually run, not cache hits) that produced rows
+        through a terminal fold must have registered >= 1 ``fold.calls``.
+    """
+    def fail(msg: str):
+        raise SanitizeError(
+            f"dispatch sanitizer: {msg}\n  plan routing: "
+            f"{_routing_summary(pplan)}\n  delta: "
+            f"{ {k: v for k, v in sorted(delta.items())} }")
+
+    any_pair_fold = any(
+        isinstance(s, TerminalFold) and s.routing == "pair_kernel"
+        for b in pplan.bag_ops for s in b.steps)
+    any_pair_extend = any(
+        isinstance(s, Extend) and s.routing == "pair_store"
+        for b in pplan.bag_ops for s in b.steps)
+    if not any_pair_fold and delta.get("fold.pair_count_calls", 0):
+        fail("pair-cohort fold kernel fired but no bag routed a fold to "
+             "'pair_kernel'")
+    if not any_pair_fold and not any_pair_extend \
+            and delta.get("extend.pair_materialize_calls", 0):
+        fail("pair-store materialize fired but no step routed to the "
+             "layout store")
+
+    ec = delta.get("extend.calls", 0)
+    hs = delta.get("extend.host_syncs", 0)
+    if backend_name == "device":
+        budget = ec
+    else:
+        # one sync per PROBE atom: every extension has at most
+        # (constraining inputs - 1) probes; bound by the widest bag
+        widest = max((len(b.scan.accesses) + len(b.scan.child_inputs)
+                      for b in pplan.bag_ops), default=1)
+        if pplan.final is not None:
+            widest = max(widest, len(pplan.final.inputs))
+        budget = ec * max(1, widest - 1)
+    if hs > budget:
+        fail(f"{hs} host syncs exceed the budget of {budget} for {ec} "
+             f"extension calls on the {backend_name} backend (<=1 per "
+             f"{'fused extension' if backend_name == 'device' else 'probe atom'})")
+
+    executed = {op_id for op_id, m in metrics.items()
+                if m and "level_actuals" in m}
+    ran_fold_rows = any(
+        b.materialize.op_id in executed
+        and metrics[b.materialize.op_id].get("actual_rows", 0) > 0
+        and any(isinstance(s, TerminalFold) for s in b.steps)
+        for b in pplan.bag_ops)
+    if ran_fold_rows and not delta.get("fold.calls", 0):
+        fail("a terminal-fold bag executed and produced rows but no "
+             "fold.calls were recorded")
+
+
+def _routing_summary(pplan: PhysicalPlan) -> dict:
+    out = {}
+    for b in pplan.bag_ops:
+        for s in b.steps:
+            if isinstance(s, TerminalFold):
+                out[f"bag#{b.materialize.op_id}.fold.{s.var}"] = s.routing
+            elif isinstance(s, Extend) and s.routing != "search":
+                out[f"bag#{b.materialize.op_id}.extend.{s.var}"] = s.routing
+    return out
+
+
+def main(argv: list | None = None) -> int:
+    try:
+        counts = check_all()
+    except KernelContractError as e:
+        print(f"FAIL: {e}")
+        return 1
+    for name, n in counts.items():
+        print(f"ok: {name} ({n} captured launch(es))")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,341 @@
+"""Host-sync linter: AST pass enforcing the ROADMAP's sync discipline.
+
+The performance contract of the device backend (ROADMAP item 3) is a
+*sync budget*: at most one host round-trip per Generic-Join attribute
+extension, one ragged extraction in the materialize path, and one
+closing transfer per recursion fixpoint.  Nothing in the runtime can
+*prevent* a new ``.item()`` or ``np.*`` call from sneaking into a jitted
+trace — it would silently force a device→host transfer per call and only
+show up as a latency regression.  This linter makes the budget a static,
+monotone property:
+
+  * **traced-context hazards** — inside any function that jax traces
+    (``@jax.jit`` in its spellings, or a kernel passed to
+    ``pl.pallas_call``, including ``functools.partial``-wrapped ones),
+    flag ``.item()`` calls, ``int()/float()/bool()`` coercions of
+    non-literal values, any ``np.*`` call (host numpy inside a trace
+    forces materialization), and ``if``/``while`` tests over ``jnp``
+    expressions (implicit ``__bool__`` on a tracer).  Scanned across ALL
+    of ``src/repro/{core,kernels}``; the codebase is clean today and must
+    stay clean — these findings never enter the baseline legitimately.
+  * **transfer points** — explicit host syncs (``jax.device_get``,
+    ``.block_until_ready()``, ``np.nonzero``) in the modules that
+    orchestrate device execution (``core/backend.py``,
+    ``core/recursion.py``, ``kernels/**``).  These are *accounted*, not
+    banned: the committed ``sync_baseline.json`` enumerates exactly
+    today's known syncs.
+
+``compare()`` fails in BOTH directions against the baseline: a new
+finding is a regression (CI fails), and a finding that disappears means
+a sync was actually removed — CI fails too, demanding the baseline file
+shrink with it (run ``python -m repro.analysis.sync_lint
+--write-baseline``), so ROADMAP progress is recorded monotonically.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import sys
+
+_SRC_ROOT = pathlib.Path(__file__).resolve().parents[2]   # .../src
+_REPRO_ROOT = _SRC_ROOT / "repro"
+DEFAULT_BASELINE = pathlib.Path(__file__).with_name("sync_baseline.json")
+
+# Packages the traced-context pass covers.
+SCAN_PACKAGES = ("core", "kernels")
+
+# Modules whose explicit transfer points are budgeted in the baseline:
+# the device-orchestration layer. Host-side oracles (intersect.py's numpy
+# reference paths, data generators, engine head materialization) transfer
+# nothing from a device and stay out of the budget.
+DEVICE_PATH_MODULES = ("core/backend.py", "core/recursion.py", "kernels/")
+
+# Finding kinds. The first group only ever appears as a regression; the
+# second group is the accounted budget.
+TRACED_KINDS = ("item", "coerce", "np_call", "implicit_bool")
+TRANSFER_KINDS = ("device_get", "block_until_ready", "np_nonzero")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    file: str        # path relative to src/repro, posix separators
+    qualname: str    # dotted enclosing def/class chain ("<module>" if none)
+    kind: str
+    lineno: int
+    detail: str
+
+    @property
+    def key(self) -> str:
+        """Baseline identity — line numbers excluded so unrelated edits
+        above a known sync don't churn the baseline file."""
+        return f"{self.file}::{self.qualname}::{self.kind}"
+
+    def __str__(self) -> str:
+        return (f"{self.file}:{self.lineno} [{self.kind}] "
+                f"{self.qualname}: {self.detail}")
+
+
+# --------------------------------------------------------------- AST pass
+def _dotted(node: ast.AST) -> str | None:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """jax.jit / jit, possibly wrapped in (functools.)partial(jax.jit, …)
+    or called as jax.jit(...)."""
+    d = _dotted(node)
+    if d in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call):
+        head = _dotted(node.func)
+        if head in ("jax.jit", "jit"):
+            return True
+        if head in ("functools.partial", "partial") and node.args:
+            return _is_jit_expr(node.args[0])
+    return False
+
+
+def _kernel_name_of(node: ast.AST) -> str | None:
+    """The function name a ``pl.pallas_call`` first argument refers to —
+    a bare name or (functools.)partial(<name>, …) as in triangle_mm."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Call):
+        head = _dotted(node.func)
+        if head in ("functools.partial", "partial") and node.args:
+            return _kernel_name_of(node.args[0])
+    return None
+
+
+class _ModuleScan(ast.NodeVisitor):
+    """One pass collecting (a) jit-decorated defs, (b) names passed as
+    pallas_call kernels, (c) every def node with its qualname."""
+
+    def __init__(self):
+        self.defs: dict[str, list[tuple[str, ast.AST]]] = {}  # name -> defs
+        self.jit_defs: list[ast.AST] = []
+        self.kernel_names: set[str] = set()
+        self._stack: list[str] = []
+        self.qualname: dict[ast.AST, str] = {}
+
+    def _visit_def(self, node):
+        q = ".".join(self._stack + [node.name])
+        self.qualname[node] = q
+        self.defs.setdefault(node.name, []).append((q, node))
+        if any(_is_jit_expr(d) for d in node.decorator_list):
+            self.jit_defs.append(node)
+        self._stack.append(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+    def visit_ClassDef(self, node):
+        self._stack.append(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    def visit_Call(self, node):
+        head = _dotted(node.func)
+        if head is not None and head.split(".")[-1] == "pallas_call" \
+                and node.args:
+            name = _kernel_name_of(node.args[0])
+            if name is not None:
+                self.kernel_names.add(name)
+        elif head is not None and (head in ("jax.jit", "jit")) and node.args:
+            # jax.jit(fn) call form
+            name = _kernel_name_of(node.args[0])
+            if name is not None:
+                self.kernel_names.add(name)
+        self.generic_visit(node)
+
+
+def _contains_jnp(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id == "jnp":
+            return True
+    return False
+
+
+def _traced_hazards(fn: ast.AST, qualname: str, file: str) -> list[Finding]:
+    out = []
+
+    def add(kind, lineno, detail):
+        out.append(Finding(file, qualname, kind, lineno, detail))
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            head = _dotted(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                add("item", node.lineno, ".item() forces a host transfer "
+                    "inside a traced function")
+            elif head is not None and head.split(".")[0] in ("np", "numpy"):
+                add("np_call", node.lineno,
+                    f"host numpy call {head}() inside a traced function")
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in ("int", "float", "bool") \
+                    and node.args \
+                    and not isinstance(node.args[0], ast.Constant):
+                add("coerce", node.lineno,
+                    f"{node.func.id}() coercion of a traced value")
+        elif isinstance(node, (ast.If, ast.While)) \
+                and _contains_jnp(node.test):
+            add("implicit_bool", node.lineno,
+                "branch test over a jnp expression (implicit __bool__ on "
+                "a tracer)")
+    return out
+
+
+def _transfer_points(tree: ast.Module, scan: _ModuleScan,
+                     file: str) -> list[Finding]:
+    out = []
+    # map every node to its enclosing def qualname via a second walk
+    owner: dict[ast.AST, str] = {}
+
+    def paint(node, q):
+        for child in ast.iter_child_nodes(node):
+            q2 = scan.qualname.get(child, q)
+            owner[child] = q2
+            paint(child, q2)
+
+    paint(tree, "<module>")
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        head = _dotted(node.func)
+        q = owner.get(node, "<module>")
+        if head in ("jax.device_get", "device_get"):
+            out.append(Finding(file, q, "device_get", node.lineno,
+                               "explicit device→host transfer"))
+        elif head in ("np.nonzero", "numpy.nonzero"):
+            out.append(Finding(file, q, "np_nonzero", node.lineno,
+                               "ragged host extraction (np.nonzero)"))
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "block_until_ready":
+            out.append(Finding(file, q, "block_until_ready", node.lineno,
+                               "explicit device sync"))
+    return out
+
+
+def lint_source(source: str, file: str) -> list[Finding]:
+    """Lint one module's source. ``file`` is the repo-relative label
+    (posix, relative to ``src/repro``) used for finding identity and for
+    deciding whether transfer points are in the budgeted scope."""
+    tree = ast.parse(source, filename=file)
+    scan = _ModuleScan()
+    scan.visit(tree)
+    traced = list(scan.jit_defs)
+    for name in scan.kernel_names:
+        traced.extend(d for _, d in scan.defs.get(name, []))
+    # nested defs inside a traced function are traced too
+    traced_set = []
+    seen = set()
+    for fn in traced:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and id(node) not in seen:
+                seen.add(id(node))
+                traced_set.append(node)
+    findings = []
+    for fn in traced_set:
+        findings.extend(_traced_hazards(fn, scan.qualname[fn], file))
+    if file.startswith(DEVICE_PATH_MODULES):
+        transfers = _transfer_points(tree, scan, file)
+        # a transfer inside a traced fn is already a traced hazard; don't
+        # double-report the same (qualname, line)
+        reported = {(f.qualname, f.lineno) for f in findings}
+        findings.extend(t for t in transfers
+                        if (t.qualname, t.lineno) not in reported)
+    return sorted(findings, key=lambda f: (f.file, f.lineno, f.kind))
+
+
+def lint_tree(root: pathlib.Path = _REPRO_ROOT) -> list[Finding]:
+    findings: list[Finding] = []
+    for pkg in SCAN_PACKAGES:
+        for path in sorted((root / pkg).rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            findings.extend(lint_source(path.read_text(), rel))
+    return findings
+
+
+# --------------------------------------------------------------- baseline
+def baseline_counts(findings: list[Finding]) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for f in findings:
+        out[f.key] = out.get(f.key, 0) + 1
+    return out
+
+
+def load_baseline(path: pathlib.Path = DEFAULT_BASELINE) -> dict[str, int]:
+    return {str(k): int(v)
+            for k, v in json.loads(path.read_text()).items()}
+
+
+def write_baseline(findings: list[Finding],
+                   path: pathlib.Path = DEFAULT_BASELINE) -> None:
+    counts = baseline_counts(findings)
+    path.write_text(json.dumps(dict(sorted(counts.items())), indent=2)
+                    + "\n")
+
+
+def compare(findings: list[Finding],
+            baseline: dict[str, int]) -> tuple[list[str], list[str]]:
+    """(new, removed) vs the baseline — both non-empty lists fail CI."""
+    counts = baseline_counts(findings)
+    new = sorted(f"{k} (x{v - baseline.get(k, 0)})"
+                 for k, v in counts.items() if v > baseline.get(k, 0))
+    removed = sorted(f"{k} (x{v - counts.get(k, 0)})"
+                     for k, v in baseline.items() if counts.get(k, 0) < v)
+    return new, removed
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    write = "--write-baseline" in argv
+    findings = lint_tree()
+    traced = [f for f in findings if f.kind in TRACED_KINDS]
+    if write:
+        if traced:
+            print("refusing to baseline traced-context hazards:")
+            for f in traced:
+                print(f"  {f}")
+            return 1
+        write_baseline(findings)
+        print(f"wrote {DEFAULT_BASELINE.name}: {len(findings)} known "
+              f"sync(s)")
+        return 0
+    try:
+        baseline = load_baseline()
+    except FileNotFoundError:
+        print(f"missing {DEFAULT_BASELINE}; run with --write-baseline")
+        return 1
+    new, removed = compare(findings, baseline)
+    for f in findings:
+        print(f"known: {f}")
+    if new:
+        print("NEW host-sync hazards (fix them — the sync budget is "
+              "monotone):")
+        for k in new:
+            print(f"  + {k}")
+    if removed:
+        print("syncs removed (congratulations) — shrink the baseline with "
+              "--write-baseline:")
+        for k in removed:
+            print(f"  - {k}")
+    return 1 if (new or removed) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,7 +25,12 @@ the names ``"numpy"`` / ``"device"``; when unset, the
 Every backend carries ``stats``, a flat counter recording which kernel
 handled each intersection (``intersect.*`` keys count pairs) and the
 host-sync discipline of the extension loop (``extend.calls`` vs
-``extend.host_syncs``).
+``extend.host_syncs``).  The static verification layer
+(:mod:`repro.analysis`) rides the same counter: ``analysis.plans_verified``
+/ ``analysis.candidates_verified`` count validator runs and
+``analysis.sanitize_checks`` counts passed ``REPRO_SANITIZE`` dispatch
+assertions, so the benchmark artifact's dispatch gate also proves
+verification stayed on.
 """
 from __future__ import annotations
 

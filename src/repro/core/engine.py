@@ -53,12 +53,35 @@ from repro.core.trie import Trie
 # the differential-testing oracle the parity tests compare against.
 DEVICE_RECURSION_ENV = "REPRO_DEVICE_RECURSION"
 
+# Static plan verification (repro.analysis.plan_verify) over every lowered
+# physical plan, default ON: the validator is cheap (pure structural walk)
+# relative to planning itself. "REPRO_VERIFY_PLANS=off" is the escape
+# hatch for debugging the validator itself.
+VERIFY_PLANS_ENV = "REPRO_VERIFY_PLANS"
+# Runtime dispatch sanitizer (repro.analysis.kernel_check.check_dispatch),
+# default OFF: after every rule execution, assert the backend's dispatch
+# counters match what the validated plan predicted. "REPRO_SANITIZE=1"
+# turns it on (tests and the benchmark harness do).
+SANITIZE_ENV = "REPRO_SANITIZE"
 
-def device_recursion_enabled(default: bool = True) -> bool:
-    val = os.environ.get(DEVICE_RECURSION_ENV)
+
+def _env_flag(name: str, default: bool) -> bool:
+    val = os.environ.get(name)
     if val is None:
         return default
     return val.strip().lower() not in ("off", "0", "false", "no")
+
+
+def device_recursion_enabled(default: bool = True) -> bool:
+    return _env_flag(DEVICE_RECURSION_ENV, default)
+
+
+def verify_plans_enabled(default: bool = True) -> bool:
+    return _env_flag(VERIFY_PLANS_ENV, default)
+
+
+def sanitize_enabled(default: bool = False) -> bool:
+    return _env_flag(SANITIZE_ENV, default)
 
 
 @dataclasses.dataclass
@@ -95,7 +118,9 @@ class Engine:
 
     def __init__(self, use_ghd: bool = True, use_codegen: bool = True,
                  backend=None, plan_search: Optional[bool] = None,
-                 device_recursion: Optional[bool] = None):
+                 device_recursion: Optional[bool] = None,
+                 verify_plans: Optional[bool] = None,
+                 sanitize: Optional[bool] = None):
         self.catalog = Catalog()
         self.use_ghd = use_ghd
         self.use_codegen = use_codegen
@@ -106,6 +131,17 @@ class Engine:
         # appearance-order plan, kept as the differential-testing oracle)
         self.plan_search = (plan_search_mod.enabled_by_env()
                             if plan_search is None else bool(plan_search))
+        # static plan verification (repro.analysis.plan_verify) over every
+        # lowered plan AND every plan-search candidate; None defers to
+        # REPRO_VERIFY_PLANS (default on)
+        self.verify_plans = (verify_plans_enabled()
+                             if verify_plans is None else bool(verify_plans))
+        # runtime dispatch sanitizer: after each rule execution, assert the
+        # backend counters match the validated plan's predictions; None
+        # defers to REPRO_SANITIZE (default off — it forces a stats
+        # snapshot per rule)
+        self.sanitize = (sanitize_enabled()
+                         if sanitize is None else bool(sanitize))
         # device-resident recursion (seminaive/naive fixpoints as one
         # jitted loop, core.recursion): only meaningful under the device
         # backend; None defers to REPRO_DEVICE_RECURSION (default on)
@@ -259,7 +295,9 @@ class Engine:
                 if decided is None:
                     sr = plan_search_mod.search(
                         plan, self.stats_catalog, self.catalog,
-                        bag_cache=self.bag_cache, use_ghd=self.use_ghd)
+                        bag_cache=self.bag_cache, use_ghd=self.use_ghd,
+                        verify=self.verify_plans,
+                        counter=self.backend.stats)
                     decided = (sr.chosen, sr.metadata())
                     if len(self._search_cache) >= 256:
                         self._search_cache.pop(
@@ -273,6 +311,13 @@ class Engine:
             else:
                 pplan = plan_ir.build_physical_plan(plan, self.stats_catalog,
                                                     self.catalog)
+            if self.verify_plans:
+                # static proof obligations on the plan execution is about
+                # to consume — the search path verified candidates too;
+                # this re-checks the final (re-annotated) lowering
+                from repro.analysis import assert_valid
+                assert_valid(pplan, self.catalog, self.stats_catalog)
+                self.backend.stats["analysis.plans_verified"] += 1
             fn = src = None
             if self.use_codegen:
                 fn, src = codegen_mod.emit(pplan)
@@ -284,6 +329,9 @@ class Engine:
     def _execute(self, plan: QueryPlan) -> GJResult:
         pplan, fn, src, search_md = self._physical(plan)
         self.last_physical = pplan
+        # sanitize: snapshot AFTER planning (verification counters are not
+        # execution dispatch) so the delta is exactly this rule's dispatch
+        stats_before = dict(self.backend.stats) if self.sanitize else None
         metrics: Dict[int, dict] = {}
         if self.use_codegen:
             self.last_source = src
@@ -295,6 +343,13 @@ class Engine:
                           stats_catalog=self.stats_catalog)
             res = ex.run(pplan)
             metrics = ex.metrics
+        if self.sanitize:
+            from repro.analysis.kernel_check import check_dispatch
+            delta = {k: v - stats_before.get(k, 0)
+                     for k, v in self.backend.stats.items()
+                     if v != stats_before.get(k, 0)}
+            check_dispatch(pplan, delta, metrics, self.backend.name)
+            self.backend.stats["analysis.sanitize_checks"] += 1
         md = pplan.metadata()
         for bag in md["bags"]:
             m = metrics.get(bag["op_id"])

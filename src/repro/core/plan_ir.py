@@ -98,6 +98,13 @@ class BagScan(PlanOp):
     var_order: Tuple[str, ...]
 
 
+# Legal routing vocabularies — the cohort dispatch tables in
+# ``core.layouts`` / ``core.gj`` only understand these values, and the
+# plan validator (``repro.analysis.plan_verify``) rejects anything else.
+EXTEND_ROUTINGS = frozenset({"search", "pair_store"})
+FOLD_ROUTINGS = frozenset({"search", "pair_kernel"})
+
+
 @dataclasses.dataclass
 class Extend(PlanOp):
     var: str

@@ -49,6 +49,29 @@ def as_word_kernel(interpret=None):
     return fn
 
 
+def _contract_inputs():
+    rng = np.random.default_rng(0)
+    words = rng.integers(0, 1 << 32, size=(6, 4), dtype=np.uint32)
+    return (words, np.array([0, 2, 4], np.int64),
+            np.array([1, 3, 5], np.int64))
+
+
+def _contract_ref(words, pos_a, pos_b):
+    from repro.kernels.bitset_intersect.ref import bitset_and_popcount_ref
+    w = jnp.asarray(words)
+    return bitset_and_popcount_ref(w[jnp.asarray(pos_a)],
+                                   w[jnp.asarray(pos_b)])
+
+
+# Static contract (see repro.analysis.kernel_check.check_contract).
+CONTRACT = {
+    "name": "bitset_intersect",
+    "entry": lambda w, a, b: bitset_and_popcount(w, a, b, interpret=True),
+    "ref": _contract_ref,
+    "make_inputs": _contract_inputs,
+}
+
+
 def bitset_pair_count(bs, a_slots, b_slots, *, interpret=None,
                       word_kernel=None) -> np.ndarray:
     """Batched cohort entry point: |S_a ∩ S_b| for slot pairs of one

@@ -102,6 +102,36 @@ def bitset_pair_materialize(bs, a_slots, b_slots, *, interpret=None):
             rank_a.astype(np.int64), rank_b.astype(np.int64))
 
 
+def _contract_inputs():
+    rng = np.random.default_rng(0)
+    p, b = _BLOCK_ROWS, 128   # one full tile: the raw kernel's minimum
+    ba = rng.integers(0, 2, size=(p, b)).astype(np.int32)
+    bb = rng.integers(0, 2, size=(p, b)).astype(np.int32)
+    return ba, bb
+
+
+def _contract_entry(ba, bb):
+    return bitset_materialize_kernel(
+        jnp.asarray(ba), jnp.asarray(bb), _tri(ba.shape[1]),
+        block_rows=_BLOCK_ROWS, interpret=True)
+
+
+def _contract_ref(ba, bb):
+    from repro.kernels.materialize.ref import bitset_materialize_ref
+    return bitset_materialize_ref(jnp.asarray(ba), jnp.asarray(bb))
+
+
+# Static contract (see repro.analysis.kernel_check.check_contract): the
+# raw kernel wrapper (the ragged host extraction above it needs a live
+# BlockedBitset) against the pure-jnp band/rank oracle.
+CONTRACT = {
+    "name": "materialize",
+    "entry": _contract_entry,
+    "ref": _contract_ref,
+    "make_inputs": _contract_inputs,
+}
+
+
 def as_materialize_kernel(interpret=None):
     """Adapter matching HybridSetStore's ``materialize_kernel`` callable
     (``(bs, a_slots, b_slots) -> (pair_id, values, rank_a, rank_b)``)."""

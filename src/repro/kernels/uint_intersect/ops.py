@@ -59,6 +59,41 @@ def _gather_pad(offsets: np.ndarray, neighbors: np.ndarray,
     return out
 
 
+def _contract_inputs():
+    """Representative padded batches for the kernel contract checker
+    (``repro.analysis.kernel_check``): ragged sorted rows, -1 padded."""
+    rng = np.random.default_rng(0)
+    def rows(p, width, universe):
+        out = np.full((p, width), -1, np.int32)
+        for i in range(p):
+            k = int(rng.integers(1, width + 1))
+            out[i, :k] = np.sort(rng.choice(universe, size=k, replace=False))
+        return out
+    # universe small enough that some rows MUST intersect — an all-zero
+    # count vector would make the numeric oracle cross-check vacuous
+    a, b = rows(5, 7, 12), rows(5, 9, 12)
+    assert int(np.sum([len(np.intersect1d(r[r >= 0], s[s >= 0]))
+                       for r, s in zip(a, b)])) > 0
+    return a, b
+
+
+def _contract_ref(a, b):
+    from repro.kernels.uint_intersect.ref import uint_intersect_count_ref
+    return uint_intersect_count_ref(jnp.asarray(a, jnp.int32),
+                                    jnp.asarray(b, jnp.int32))
+
+
+# Static contract (see repro.analysis.kernel_check.check_contract): the
+# dispatch entry point, the pure-jnp oracle it must agree with, and
+# inputs that exercise the padding paths.
+CONTRACT = {
+    "name": "uint_intersect",
+    "entry": lambda a, b: uint_intersect_count(a, b, interpret=True),
+    "ref": _contract_ref,
+    "make_inputs": _contract_inputs,
+}
+
+
 def intersect_count_csr_batched(offsets, neighbors, u, v, *, interpret=None,
                                 max_len: int = 512) -> np.ndarray:
     """Batched cohort entry point for the execution backend: one

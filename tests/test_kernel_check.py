@@ -1,0 +1,176 @@
+"""Kernel contract checker + REPRO_SANITIZE dispatch-mode tests."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import random_undirected_graph
+from repro.analysis import kernel_check
+from repro.analysis.kernel_check import (CapturedCall, KernelContractError,
+                                         SanitizeError, check_captured,
+                                         check_dispatch)
+from repro.core import workload as W
+from repro.core.engine import Engine, sanitize_enabled
+
+
+def make_engine(src, dst, **kw):
+    eng = Engine(backend="numpy", **kw)
+    eng.load_edges("Edge", src, dst)
+    for a in W.ALIASES:
+        eng.alias(a, "Edge")
+    return eng
+
+
+# ------------------------------------------------------- static contracts
+def test_all_kernel_contracts_pass():
+    counts = kernel_check.check_all()
+    assert set(counts) == {"uint_intersect", "bitset_intersect",
+                           "materialize"}
+    assert all(n >= 1 for n in counts.values())
+
+
+def _spec(block, index_map):
+    import jax.experimental.pallas as pl
+    return pl.BlockSpec(block, index_map)
+
+
+def _call(grid, in_specs, operands, out_specs, out_shape):
+    return CapturedCall(kernel_name="fake", grid=grid, in_specs=in_specs,
+                        out_specs=out_specs, out_shape=out_shape,
+                        operands=operands)
+
+
+def test_non_tiling_blockspec_rejected():
+    rec = _call(
+        grid=(2,),
+        in_specs=[_spec((3, 8), lambda i: (i, 0))],   # 3 does not tile 8
+        operands=[jax.ShapeDtypeStruct((8, 8), np.int32)],
+        out_specs=[_spec((4, 8), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((8, 8), np.int32)])
+    with pytest.raises(KernelContractError, match="does not tile"):
+        check_captured("fake", rec)
+
+
+def test_index_map_out_of_bounds_rejected():
+    rec = _call(
+        grid=(4,),                                    # 4 steps, 2 blocks
+        in_specs=[_spec((4, 8), lambda i: (i, 0))],
+        operands=[jax.ShapeDtypeStruct((8, 8), np.int32)],
+        out_specs=[_spec((4, 8), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((8, 8), np.int32)])
+    with pytest.raises(KernelContractError, match="out of bounds"):
+        check_captured("fake", rec)
+
+
+def test_uncovered_output_block_rejected():
+    rec = _call(
+        grid=(2,),
+        in_specs=[_spec((4, 8), lambda i: (i, 0))],
+        operands=[jax.ShapeDtypeStruct((8, 8), np.int32)],
+        out_specs=[_spec((4, 8), lambda i: (0, 0))],  # never writes block 1
+        out_shape=[jax.ShapeDtypeStruct((8, 8), np.int32)])
+    with pytest.raises(KernelContractError, match="never writes"):
+        check_captured("fake", rec)
+
+
+def test_spec_operand_count_mismatch_rejected():
+    rec = _call(
+        grid=(1,),
+        in_specs=[],
+        operands=[jax.ShapeDtypeStruct((8,), np.int32)],
+        out_specs=[_spec((8,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((8,), np.int32)])
+    with pytest.raises(KernelContractError, match="in_specs"):
+        check_captured("fake", rec)
+
+
+def test_contract_oracle_mismatch_rejected():
+    """A contract whose entry disagrees with its oracle must fail."""
+    from repro.kernels.uint_intersect import ops as uops
+    bad = dict(uops.CONTRACT)
+    # right shape/dtype, wrong values — the numeric cross-check must fire
+    bad["ref"] = lambda a, b: jax.numpy.zeros((np.shape(a)[0],),
+                                              jax.numpy.int32)
+    with pytest.raises(KernelContractError, match="oracle"):
+        kernel_check.check_contract(bad)
+
+
+# --------------------------------------------------------- runtime checks
+def test_sanitize_engine_run_both_routings():
+    src, dst, _ = random_undirected_graph(20, 0.3, 3)
+    eng = make_engine(src, dst, sanitize=True)
+    eng.query(W.TRIANGLE_COUNT)          # pair_kernel fold
+    eng.query("P(y,a) :- R(x,y),S(y,z),T(x,z),U(x,a).")  # listing + topdown
+    st = eng.dispatch_summary()
+    assert st.get("analysis.sanitize_checks", 0) >= 2
+
+
+def test_sanitize_off_by_default():
+    assert sanitize_enabled() is False
+    src, dst, _ = random_undirected_graph(12, 0.3, 3)
+    eng = make_engine(src, dst)
+    assert eng.sanitize is False
+    eng.query(W.TRIANGLE_COUNT)
+    assert eng.dispatch_summary().get("analysis.sanitize_checks", 0) == 0
+
+
+def test_sanitize_env_resolution(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled() is True
+    src, dst, _ = random_undirected_graph(12, 0.3, 3)
+    eng = make_engine(src, dst)
+    assert eng.sanitize is True
+    eng.query(W.TRIANGLE_COUNT)
+    assert eng.dispatch_summary().get("analysis.sanitize_checks", 0) >= 1
+
+
+def _path_plan():
+    """A plan with NO pair routing anywhere (2-atom path join)."""
+    src, dst, _ = random_undirected_graph(16, 0.3, 5)
+    eng = make_engine(src, dst)
+    eng.query("P(x,z) :- R(x,y),S(y,z).")
+    pp = eng.last_physical
+    from repro.core.plan_ir import Extend, TerminalFold
+    assert not any(
+        (isinstance(s, TerminalFold) and s.routing == "pair_kernel")
+        or (isinstance(s, Extend) and s.routing == "pair_store")
+        for b in pp.bag_ops for s in b.steps)
+    return pp
+
+
+def test_fabricated_pair_dispatch_raises():
+    """The sanitizer's core assertion: pair-cohort kernels must not fire
+    on a plan that never routed to them."""
+    pp = _path_plan()
+    with pytest.raises(SanitizeError, match="pair-cohort"):
+        check_dispatch(pp, {"fold.pair_count_calls": 2}, {}, "numpy")
+    with pytest.raises(SanitizeError, match="pair-store"):
+        check_dispatch(pp, {"extend.pair_materialize_calls": 1}, {},
+                       "numpy")
+
+
+def test_sync_budget_violation_raises():
+    pp = _path_plan()
+    # device backend: at most ONE host sync per fused extension call
+    with pytest.raises(SanitizeError, match="host syncs exceed"):
+        check_dispatch(pp, {"extend.calls": 2, "extend.host_syncs": 3},
+                       {}, "device")
+    # within budget: fine
+    check_dispatch(pp, {"extend.calls": 2, "extend.host_syncs": 2},
+                   {}, "device")
+    # numpy oracle: one per probe atom — budget scales with bag width
+    check_dispatch(pp, {"extend.calls": 2, "extend.host_syncs": 2},
+                   {}, "numpy")
+
+
+def test_missing_fold_dispatch_raises():
+    src, dst, _ = random_undirected_graph(16, 0.3, 5)
+    eng = make_engine(src, dst)
+    eng.query(W.TRIANGLE_COUNT)
+    pp = eng.last_physical
+    op_id = pp.bag_ops[0].materialize.op_id
+    metrics = {op_id: {"actual_rows": 5, "level_actuals": []}}
+    with pytest.raises(SanitizeError, match="fold.calls"):
+        check_dispatch(pp, {"extend.calls": 2, "extend.host_syncs": 2},
+                       metrics, "numpy")
+    # cached bag (no level_actuals): no fold demanded
+    check_dispatch(pp, {}, {op_id: {"actual_rows": 5}}, "numpy")

@@ -86,6 +86,44 @@ def test_estimated_vs_actual_cardinalities_recorded():
                    for s in bag["steps"])
 
 
+@pytest.mark.parametrize("backend", ["numpy", "device"])
+@pytest.mark.parametrize("qname", sorted(PAPER_QUERIES))
+def test_q_error_scorecard_populated_and_finite(qname, backend):
+    """``plan_metadata()``'s optimizer scorecard: every paper query on
+    both backends records finite est-vs-actual fields — per-bag
+    ``est_rows``/``actual_rows`` and the geometric-mean q-error in
+    ``est_error``.  Device-resident fixpoint records carry no bags (the
+    recursion never leaves the device), so their scorecard is the empty
+    one; every other record must have scored at least one bag."""
+    import math
+    src, dst, _ = random_undirected_graph(18, 0.3, 7)
+    eng = make_engine(src, dst, backend)
+    eng.query(PAPER_QUERIES[qname].replace("{s}", str(int(src[0]))))
+    md = eng.plan_metadata()
+    assert md
+    for rec in md:
+        ee = rec["est_error"]
+        assert set(ee) == {"n_bags", "geo_mean_q"}
+        if rec.get("recursion", {}).get("mode") == "device":
+            assert ee == {"n_bags": 0, "geo_mean_q": None}
+            continue
+        assert ee["n_bags"] >= 1
+        assert math.isfinite(ee["geo_mean_q"]) and ee["geo_mean_q"] >= 1.0
+        scored = 0
+        for bag in rec["bags"]:
+            assert math.isfinite(bag["est_rows"]) and bag["est_rows"] > 0
+            if "actual_rows" in bag:  # cache-hit bags are not re-scored
+                scored += 1
+                assert math.isfinite(float(bag["actual_rows"]))
+                assert bag["actual_rows"] >= 0
+            for step in bag["steps"]:
+                assert math.isfinite(step["cost"])
+                if step["op"] == "extend":  # folds estimate cost only
+                    assert math.isfinite(step["est_rows"])
+        assert scored == ee["n_bags"]
+    assert any(rec["est_error"]["n_bags"] >= 1 for rec in md)
+
+
 # ------------------------------------- shared-IR parity (acceptance gate)
 @pytest.mark.parametrize("qname", sorted(PAPER_QUERIES))
 def test_paper_query_parity_across_lowerings_and_backends(qname):

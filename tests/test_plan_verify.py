@@ -1,0 +1,260 @@
+"""Plan-IR validator (repro.analysis.plan_verify) tests.
+
+The acceptance gate of the static verification layer: every paper-query
+plan and every plan-search candidate passes with ``verify_plans`` on by
+default, and the validator REJECTS reconstructions of the shipped bug
+classes — PR 3's dropped connector attributes and invalid routing/layout
+annotations — as static errors before any tuple moves.
+"""
+import math
+
+import pytest
+
+from conftest import random_undirected_graph
+from repro.analysis import (PlanVerificationError, assert_valid,
+                            verify_physical_plan)
+from repro.core import workload as W
+from repro.core.engine import Engine, verify_plans_enabled
+from repro.core.statistics import MAX_THRESHOLD_BITS
+
+PAPER_QUERIES = {
+    "triangle_count": W.TRIANGLE_COUNT,
+    "triangle_list": W.TRIANGLE_LIST,
+    "4clique": W.FOUR_CLIQUE,
+    "lollipop": W.LOLLIPOP,
+    "barbell": W.BARBELL,
+    "pagerank": W.pagerank_program(iters=4),
+    "sssp": W.sssp_program("{s}"),
+}
+SPAN_QUERY = "P(y,a) :- R(x,y),S(y,z),T(x,z),U(x,a)."
+
+
+def make_engine(src, dst, **kw):
+    eng = Engine(backend="numpy", **kw)
+    eng.load_edges("Edge", src, dst)
+    for a in W.ALIASES:
+        eng.alias(a, "Edge")
+    return eng
+
+
+def span_plan(seed=3):
+    """A two-bag listing plan (top-down join over a connector attr)."""
+    src, dst, _ = random_undirected_graph(16, 0.3, seed)
+    eng = make_engine(src, dst)
+    eng.query(SPAN_QUERY)
+    return eng, eng.last_physical
+
+
+def triangle_plan(seed=1):
+    src, dst, _ = random_undirected_graph(20, 0.3, seed)
+    eng = make_engine(src, dst)
+    eng.query(PAPER_QUERIES["triangle_count"])
+    return eng, eng.last_physical
+
+
+def codes(violations):
+    return {v.code for v in violations}
+
+
+# ------------------------------------------------------------ happy paths
+@pytest.mark.parametrize("qname", sorted(PAPER_QUERIES))
+def test_paper_query_plans_validate(qname):
+    src, dst, _ = random_undirected_graph(18, 0.3, 7)
+    eng = make_engine(src, dst)
+    eng.query(PAPER_QUERIES[qname].replace("{s}", str(int(src[0]))))
+    if eng.last_physical is not None:
+        assert verify_physical_plan(eng.last_physical, eng.catalog,
+                                    eng.stats_catalog) == []
+
+
+def test_verify_on_by_default_and_counted():
+    eng, _ = triangle_plan()
+    assert eng.verify_plans is True
+    st = eng.dispatch_summary()
+    assert st.get("analysis.plans_verified", 0) >= 1
+    # plan search on by default: every candidate was validated too
+    assert st.get("analysis.candidates_verified", 0) >= 1
+
+
+def test_env_escape_hatch(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY_PLANS", "off")
+    assert verify_plans_enabled() is False
+    src, dst, _ = random_undirected_graph(12, 0.3, 5)
+    eng = make_engine(src, dst)
+    assert eng.verify_plans is False
+    eng.query(PAPER_QUERIES["triangle_count"])
+    assert eng.dispatch_summary().get("analysis.plans_verified", 0) == 0
+    monkeypatch.delenv("REPRO_VERIFY_PLANS")
+    assert verify_plans_enabled() is True
+
+
+def test_structural_checks_run_without_catalog():
+    """Hand-built plans (no catalog) still get the structural checks."""
+    _, pp = triangle_plan()
+    assert verify_physical_plan(pp, catalog=None, stats=None) == []
+
+
+def test_reload_reannotates_and_revalidates():
+    """Regression guard for the stale-annotation bug class the ISSUE
+    names: a reload must re-plan against fresh statistics (new layout
+    thresholds), and the re-annotated plan is re-validated."""
+    src1, dst1, _ = random_undirected_graph(20, 0.3, 11)
+    src2, dst2, _ = random_undirected_graph(40, 0.08, 5)
+    eng = make_engine(src1, dst1)
+    eng.query(PAPER_QUERIES["triangle_count"])
+    verified1 = eng.dispatch_summary()["analysis.plans_verified"]
+    thr1 = eng.last_physical.bag_ops[0].steps[-1].layout_threshold
+    eng.load_edges("Edge", src2, dst2)
+    eng.query(PAPER_QUERIES["triangle_count"])
+    assert eng.dispatch_summary()["analysis.plans_verified"] > verified1
+    thr2 = eng.last_physical.bag_ops[0].steps[-1].layout_threshold
+    assert thr1 != thr2  # annotations are data-dependent, not pinned
+    assert verify_physical_plan(eng.last_physical, eng.catalog,
+                                eng.stats_catalog) == []
+
+
+# --------------------------------------------------- rejected: connectors
+def test_dropped_child_connector_rejected():
+    """The PR 3 bug class, child side: a connector attribute projected
+    out of the child's materialized output."""
+    eng, pp = span_plan()
+    child = pp.bag_ops[0]
+    ci = pp.bag_ops[-1].scan.child_inputs[0]
+    assert set(ci.vars) <= set(child.materialize.output_vars)
+    child.materialize.output_vars = tuple(
+        v for v in child.materialize.output_vars if v not in ci.vars)
+    vs = verify_physical_plan(pp, eng.catalog)
+    assert "dropped-connector" in codes(vs)
+    with pytest.raises(PlanVerificationError, match="dropped-connector"):
+        assert_valid(pp, eng.catalog)
+
+
+def test_dropped_parent_connector_rejected():
+    """The PR 3 bug class, parent side: a listing plan whose parent bag
+    drops the attribute it shares with a child — the top-down join would
+    degenerate into a cross product."""
+    eng, pp = span_plan()
+    parent = pp.bag_ops[-1]
+    ci = parent.scan.child_inputs[0]
+    assert pp.final is not None
+    parent.materialize.output_vars = tuple(
+        v for v in parent.materialize.output_vars if v not in ci.vars)
+    assert "dropped-connector" in codes(verify_physical_plan(pp,
+                                                             eng.catalog))
+
+
+# ------------------------------------------------------ rejected: routing
+def test_invalid_routing_cohort_rejected():
+    eng, pp = triangle_plan()
+    fold = pp.bag_ops[0].steps[-1]
+    fold.routing = "simd_gather"   # not in plan_ir.FOLD_ROUTINGS
+    vs = verify_physical_plan(pp, eng.catalog, eng.stats_catalog)
+    assert "routing-invalid" in codes(vs)
+
+
+def test_pair_routing_without_pair_structure_rejected():
+    """'pair_kernel' on a fold that is NOT a binary self-join: the
+    runtime would silently fall back, so the annotation is a lie."""
+    eng, pp = span_plan()
+    from repro.core.plan_ir import Extend, TerminalFold
+    bops = pp.bag_ops[-1]
+    step = bops.steps[0]
+    assert isinstance(step, Extend)
+    step.routing = "pair_store"
+    vs = verify_physical_plan(pp, eng.catalog)
+    assert "routing-invalid" in codes(vs)
+
+
+def test_threshold_out_of_range_rejected():
+    eng, pp = triangle_plan()
+    fold = pp.bag_ops[0].steps[-1]
+    assert fold.routing == "pair_kernel"
+    fold.layout_threshold = 10.0  # below block_bits
+    vs = verify_physical_plan(pp, eng.catalog, eng.stats_catalog)
+    assert "threshold-range" in codes(vs)
+    fold.layout_threshold = MAX_THRESHOLD_BITS * 2.0
+    vs = verify_physical_plan(pp, eng.catalog, eng.stats_catalog)
+    assert "threshold-range" in codes(vs)
+
+
+def test_search_routing_with_threshold_rejected():
+    eng, pp = triangle_plan()
+    fold = pp.bag_ops[0].steps[-1]
+    fold.routing = "search"
+    assert fold.layout_threshold is not None   # now inconsistent
+    vs = verify_physical_plan(pp, eng.catalog, eng.stats_catalog)
+    assert "threshold-range" in codes(vs)
+
+
+# ---------------------------------------------------- rejected: estimates
+def test_nonfinite_estimate_rejected():
+    eng, pp = triangle_plan()
+    pp.bag_ops[0].steps[0].est_rows = float("nan")
+    assert "est-invalid" in codes(verify_physical_plan(pp, eng.catalog))
+
+
+def test_agm_exceeded_rejected():
+    eng, pp = triangle_plan()
+    m = eng.catalog.get("Edge").num_tuples
+    pp.bag_ops[0].steps[-1].est_rows = float(m) ** 3  # >> m^1.5 AGM cap
+    vs = verify_physical_plan(pp, eng.catalog)
+    assert "agm-exceeded" in codes(vs)
+    assert math.isfinite(m ** 1.5)
+
+
+# ------------------------------------------------- rejected: shape/reuse
+def test_wrong_n_constraining_rejected():
+    eng, pp = triangle_plan()
+    pp.bag_ops[0].steps[0].n_constraining += 1
+    assert "step-shape" in codes(verify_physical_plan(pp, eng.catalog))
+
+
+def test_unconstrained_variable_rejected():
+    eng, pp = triangle_plan()
+    scan = pp.bag_ops[0].scan
+    scan.var_order = scan.var_order + ("phantom",)
+    vs = verify_physical_plan(pp, eng.catalog)
+    assert vs  # step-shape (count mismatch) at minimum
+    assert codes(vs) & {"unconstrained-var", "step-shape"}
+
+
+def test_incomplete_reuse_rels_rejected():
+    """A bag-cache key that omits a relation the bag reads would survive
+    reloads of that relation — stale-result hazard."""
+    eng, pp = triangle_plan()
+    mat = pp.bag_ops[0].materialize
+    assert mat.reuse_rels == ("Edge",)
+    mat.reuse_rels = ()
+    assert "reuse-key" in codes(verify_physical_plan(pp, eng.catalog))
+
+
+def test_malformed_reuse_struct_rejected():
+    eng, pp = triangle_plan()
+    pp.bag_ops[0].materialize.reuse_struct = ("not", "canonical")
+    assert "reuse-key" in codes(verify_physical_plan(pp, eng.catalog))
+
+
+# -------------------------------------------------------------- topdown
+def test_final_join_input_coverage():
+    eng, pp = span_plan()
+    pp.final.inputs = pp.final.inputs[:1]  # drop one reduced bag
+    vs = verify_physical_plan(pp, eng.catalog)
+    assert "unconstrained-var" in codes(vs)
+
+
+def test_search_candidates_all_validated():
+    """plan_search with verify=True validates every candidate, counted
+    on the backend stats counter."""
+    import collections
+
+    from repro.core import plan_search as ps
+    src, dst, _ = random_undirected_graph(16, 0.3, 9)
+    eng = make_engine(src, dst)
+    plan = eng._compile(__import__("repro.core.datalog",
+                                   fromlist=["parse"])
+                        .parse(PAPER_QUERIES["4clique"]).rules[0])
+    counter = collections.Counter()
+    sr = ps.search(plan, eng.stats_catalog, eng.catalog,
+                   bag_cache=eng.bag_cache, verify=True, counter=counter)
+    assert counter["analysis.candidates_verified"] == sr.candidates
+    assert verify_physical_plan(sr.physical, eng.catalog) == []

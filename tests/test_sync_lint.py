@@ -1,0 +1,164 @@
+"""Host-sync linter (repro.analysis.sync_lint) tests.
+
+Locks the ROADMAP item-3 discipline: the committed baseline exactly
+enumerates today's known host syncs (one per fused device extension, the
+materialize path's one device_get + one np.nonzero, one closing
+device_get per recursion fixpoint), injected hazards in traced code are
+caught statically, and the baseline comparison fails in BOTH directions.
+"""
+import pathlib
+import textwrap
+
+from repro.analysis import sync_lint
+
+BACKEND_PATH = (pathlib.Path(sync_lint._REPRO_ROOT) / "core" / "backend.py")
+
+
+def kinds(findings):
+    return [f.kind for f in findings]
+
+
+# ------------------------------------------------------------- the tree
+def test_tree_matches_committed_baseline_exactly():
+    findings = sync_lint.lint_tree()
+    baseline = sync_lint.load_baseline()
+    new, removed = sync_lint.compare(findings, baseline)
+    assert new == [], f"new host-sync hazards: {new}"
+    assert removed == [], (f"syncs removed but baseline not shrunk: "
+                           f"{removed}")
+
+
+def test_baseline_enumerates_exactly_the_known_syncs():
+    """The ISSUE's acceptance list: <=1 sync per GJ extension (device
+    backend's fused probe), the materialize np.nonzero extraction, and
+    the fixpoint closing syncs — nothing else."""
+    baseline = sync_lint.load_baseline()
+    assert baseline == {
+        "core/backend.py::DeviceBackend.extend::device_get": 1,
+        "core/recursion.py::naive_device_fixpoint::device_get": 1,
+        "core/recursion.py::seminaive_device_fixpoint::device_get": 1,
+        "kernels/materialize/ops.py::bitset_pair_materialize::device_get": 1,
+        "kernels/materialize/ops.py::bitset_pair_materialize::np_nonzero": 1,
+    }
+
+
+def test_no_traced_context_hazards_in_tree():
+    """jit/Pallas-traced code is clean today and must stay clean — these
+    finding kinds never legitimately enter the baseline."""
+    traced = [f for f in sync_lint.lint_tree()
+              if f.kind in sync_lint.TRACED_KINDS]
+    assert traced == [], [str(f) for f in traced]
+
+
+# ------------------------------------------------------------ injection
+def test_injected_item_in_jitted_extension_caught():
+    """The acceptance scenario: inject a ``.item()`` into the REAL
+    device backend's jitted fused-probe path; the linter must flag it."""
+    source = BACKEND_PATH.read_text()
+    needle = "poss.append(pos)"
+    assert needle in source  # _fused_probe body (jitted)
+    injected = source.replace(needle, "poss.append(pos.item())")
+    findings = sync_lint.lint_source(injected, "core/backend.py")
+    items = [f for f in findings if f.kind == "item"]
+    assert len(items) == 1
+    assert items[0].qualname == "_fused_probe"
+    # and the both-direction gate fails on it
+    new, _removed = sync_lint.compare(findings, sync_lint.load_baseline())
+    assert any("_fused_probe::item" in k for k in new)
+
+
+def test_coercions_numpy_and_implicit_bool_flagged():
+    src = textwrap.dedent("""
+        import jax, numpy as np, jax.numpy as jnp
+
+        @jax.jit
+        def traced(x):
+            n = int(x.shape[0])
+            y = np.searchsorted(x, 3)
+            if jnp.any(x > 0):
+                return y
+            return x.item()
+    """)
+    got = kinds(sync_lint.lint_source(src, "core/fake.py"))
+    assert sorted(got) == ["coerce", "implicit_bool", "item", "np_call"]
+
+
+def test_pallas_kernel_fns_are_traced_including_partial():
+    """Kernels reach pallas_call bare or functools.partial-wrapped (the
+    triangle_mm idiom) — both must be treated as traced."""
+    src = textwrap.dedent("""
+        import functools
+        import numpy as np
+        from jax.experimental import pallas as pl
+
+        def _kernel(a_ref, o_ref, *, n_k):
+            o_ref[...] = np.asarray(a_ref[...])
+
+        def _plain(a_ref, o_ref):
+            bad = a_ref[...].item()
+
+        def run(a, nb):
+            f = pl.pallas_call(functools.partial(_kernel, n_k=nb),
+                               out_shape=None)
+            g = pl.pallas_call(_plain, out_shape=None)
+            return f(a), g(a)
+    """)
+    findings = sync_lint.lint_source(src, "kernels/fake/kernel.py")
+    by_fn = {(f.qualname, f.kind) for f in findings}
+    assert ("_kernel", "np_call") in by_fn
+    assert ("_plain", "item") in by_fn
+
+
+def test_untraced_host_code_not_flagged():
+    src = textwrap.dedent("""
+        import numpy as np
+
+        def host(x):
+            n = int(x.shape[0])
+            return np.asarray(x).item()
+    """)
+    assert sync_lint.lint_source(src, "core/fake.py") == []
+
+
+def test_transfer_points_budgeted_only_in_device_modules():
+    src = textwrap.dedent("""
+        import jax, numpy as np
+
+        def pull(x):
+            y = jax.device_get(x)
+            return np.nonzero(y)
+    """)
+    # device-path module: both transfers accounted
+    got = kinds(sync_lint.lint_source(src, "kernels/fake/ops.py"))
+    assert sorted(got) == ["device_get", "np_nonzero"]
+    # host-side module: out of scope (host oracles use np.nonzero freely)
+    assert sync_lint.lint_source(src, "core/intersect.py") == []
+
+
+# ------------------------------------------------------------- baseline
+def test_compare_fails_both_directions():
+    findings = sync_lint.lint_tree()
+    baseline = sync_lint.baseline_counts(findings)
+    # regression direction
+    k = next(iter(baseline))
+    shrunk = dict(baseline)
+    shrunk[k] -= 1
+    new, removed = sync_lint.compare(findings, shrunk)
+    assert new and not removed
+    # improvement direction: baseline demands a sync that no longer exists
+    grown = dict(baseline)
+    grown["core/fake.py::gone::device_get"] = 1
+    new, removed = sync_lint.compare(findings, grown)
+    assert removed and not new
+
+
+def test_write_baseline_roundtrip(tmp_path):
+    findings = sync_lint.lint_tree()
+    path = tmp_path / "baseline.json"
+    sync_lint.write_baseline(findings, path)
+    assert sync_lint.load_baseline(path) == \
+        sync_lint.baseline_counts(findings)
+
+
+def test_cli_green_on_committed_baseline():
+    assert sync_lint.main([]) == 0
