@@ -150,6 +150,15 @@ def run_backend_suite(smoke: bool) -> list:
                 "result": digest,
                 "parity": bool(np.isclose(digest, digests[qname],
                                           rtol=1e-5, atol=1e-6)),
+                # the zero-sync invariant, stated per query: the device
+                # pipeline must never take a per-extension host round-
+                # trip (gated EXACTLY at zero below), and lands once per
+                # executed join (closing_syncs)
+                "host_syncs": int(dispatch.get("extend.host_syncs", 0)),
+                "closing_syncs": int(dispatch.get("extend.closing_syncs",
+                                                  0)),
+                "pipeline_on": bool(getattr(eng.backend,
+                                            "pipeline_enabled", False)),
                 "dispatch": dispatch,
                 # cumulative static-verification counters (plans and
                 # search candidates validated, sanitize assertions run):
@@ -214,6 +223,29 @@ def run_backend_suite(smoke: bool) -> list:
                         digest, _result_digest(host_res),
                         rtol=1e-5, atol=1e-6)),
                 }
+            # Zero-sync pipeline A/B: time the pinned per-extension-sync
+            # path (pipeline off) warmed against the device-resident
+            # count-then-fill path on the same query — the perf half of
+            # ROADMAP item 3's acceptance (device wall no worse than the
+            # sync path), plus an extra differential-parity check.
+            if (backend == "device"
+                    and row["pipeline_on"]
+                    and dispatch.get("extend.pipeline_extends", 0)):
+                ws, sync_res, sync_delta = _ab_walls(
+                    eng, q, reps,
+                    lambda m: setattr(eng.backend, "pipeline_enabled", m),
+                    capture_counters=True)
+                pipe_w, sync_w = min(ws[True]), min(ws[False])
+                row["device_pipeline"] = {
+                    "wall_s_warm": pipe_w,
+                    "sync_path_wall_s": sync_w,
+                    "sync_path_host_syncs": int(
+                        sync_delta.get("extend.host_syncs", 0)),
+                    "speedup_vs_sync_path": sync_w / max(pipe_w, 1e-9),
+                    "parity_vs_sync_path": bool(np.isclose(
+                        digest, _result_digest(sync_res),
+                        rtol=1e-5, atol=1e-6)),
+                }
             out.append(row)
     return out
 
@@ -231,11 +263,15 @@ def _gate_summary(suite: list) -> dict:
         entry = {
             "wall_s": float(r["wall_s"]),
             "parity": bool(r["parity"]),
+            "host_syncs": int(r.get("host_syncs", 0)),
             "dispatch": {k: int(v) for k, v in sorted(r["dispatch"].items())},
         }
         rec = r.get("device_recursion")
         if rec is not None:
             entry["recursion_parity"] = bool(rec["parity_vs_host_loop"])
+        pipe = r.get("device_pipeline")
+        if pipe is not None:
+            entry["pipeline_parity"] = bool(pipe["parity_vs_sync_path"])
         out[f"{r['query']}/{r['backend']}"] = entry
     return out
 
@@ -278,6 +314,9 @@ def check_baseline(suite: list, path: str, tolerance: float,
             failures.append(f"{key}: cross-backend parity FAILED")
         if b.get("recursion_parity") and not c.get("recursion_parity", True):
             failures.append(f"{key}: device-recursion vs host-loop parity "
+                            f"FAILED")
+        if b.get("pipeline_parity") and not c.get("pipeline_parity", True):
+            failures.append(f"{key}: pipeline vs pinned-sync-path parity "
                             f"FAILED")
         limit = b["wall_s"] * tolerance + BASELINE_ABS_SLACK_S
         if c["wall_s"] > limit:
@@ -365,6 +404,12 @@ def main() -> None:
         if ps:
             extra = (f"  # plan changed: {ps['speedup_vs_off']:.2f}x vs "
                      f"search-off (parity={ps['parity_vs_off']})")
+        pipe = row_.get("device_pipeline")
+        if pipe:
+            extra += (f"  # pipeline: 0 host syncs, "
+                      f"{pipe['speedup_vs_sync_path']:.2f}x vs sync path "
+                      f"({pipe['sync_path_host_syncs']} syncs, "
+                      f"parity={pipe['parity_vs_sync_path']})")
         rec = row_.get("device_recursion")
         if rec:
             extra += (f"  # device recursion: {rec['rounds']} rounds, "
@@ -392,6 +437,19 @@ def main() -> None:
     bad = [r for r in suite if not r["parity"]]
     if bad:
         print(f"# PARITY FAILURES: {[r['query'] for r in bad]}")
+        sys.exit(1)
+
+    # zero-sync gate, EXACT and baseline-independent: with the pipeline
+    # on, a device-backend query taking ANY per-extension host sync is a
+    # regression (the invariant is ==0, not "few")
+    leaky = [r for r in suite
+             if r["backend"] == "device" and r.get("pipeline_on")
+             and r.get("host_syncs", 0) != 0]
+    if leaky:
+        print("# ZERO-SYNC VIOLATIONS (extend.host_syncs != 0 with the "
+              "device pipeline on):")
+        for r in leaky:
+            print(f"#   {r['query']}: {r['host_syncs']}")
         sys.exit(1)
 
     if args.write_baseline:

@@ -291,7 +291,15 @@ def check_dispatch(pplan: PhysicalPlan, delta: dict, metrics: dict,
     ec = delta.get("extend.calls", 0)
     hs = delta.get("extend.host_syncs", 0)
     if backend_name == "device":
-        budget = ec
+        # pipelined extensions NEVER sync per-extension (the frontier
+        # lands once per join, counted as extend.closing_syncs); only
+        # extensions served by the legacy per-extension path may sync
+        budget = ec - delta.get("extend.pipeline_extends", 0)
+        if (delta.get("extend.closing_syncs", 0)
+                > delta.get("extend.pipeline_extends", 0)
+                + delta.get("pipeline.device_folds", 0) + 1):
+            fail("more closing syncs than pipelined steps + 1 — the "
+                 "pipeline is landing more than once per join")
     else:
         # one sync per PROBE atom: every extension has at most
         # (constraining inputs - 1) probes; bound by the widest bag

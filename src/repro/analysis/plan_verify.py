@@ -44,6 +44,7 @@ import dataclasses
 import math
 
 from repro.core import plan_ir
+from repro.core import statistics
 from repro.core.plan_ir import (BagOps, BagScan, Extend, MaterializeShared,
                                 PhysicalPlan, TerminalFold, TopDownJoin)
 from repro.core.statistics import BASE_BLOCK_BITS, MAX_THRESHOLD_BITS
@@ -288,6 +289,23 @@ def _verify_bag(bops: BagOps, materialized: dict[int, BagOps],
             _verify_extend_routing(step, scan, advancing_atoms,
                                    advancing_children, atom_keys, atom_arity,
                                    depth, where, add)
+            # device-pipeline buffer annotations: a cap the runtime
+            # cannot size a static frontier buffer from is a plan bug
+            if step.frontier_cap is not None and not (
+                    math.isfinite(step.frontier_cap)
+                    and 0 < step.frontier_cap
+                    <= statistics.PIPELINE_MAX_BUFFER):
+                add(PlanViolation("est-invalid", where,
+                                  f"extend {v!r}: frontier_cap="
+                                  f"{step.frontier_cap!r} is not a "
+                                  f"positive finite buffer size within "
+                                  f"PIPELINE_MAX_BUFFER"))
+            if step.morsel is not None and not (
+                    isinstance(step.morsel, int) and step.morsel > 0):
+                add(PlanViolation("est-invalid", where,
+                                  f"extend {v!r}: morsel="
+                                  f"{step.morsel!r} is not a positive "
+                                  f"integer"))
         else:
             add(PlanViolation("step-shape", where,
                               f"unknown step operator {type(step).__name__}"))

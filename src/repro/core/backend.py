@@ -35,17 +35,21 @@ verification stayed on.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import os
-from typing import Dict, Optional, Sequence, Tuple
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import intersect as I
 from repro.core.layouts import engine_store_for
 from repro.core.semiring import Semiring
 from repro.kernels.bitset_intersect.ops import as_word_kernel
+from repro.kernels.common import host_get
 from repro.kernels.materialize.ops import as_materialize_kernel
 from repro.kernels.uint_intersect.ops import intersect_count_csr_batched
 
@@ -53,6 +57,40 @@ from repro.kernels.uint_intersect.ops import intersect_count_csr_batched
 # (the SIMDGalloping analogue); shorter pairs take the membership-test
 # kernel (the SIMDShuffling analogue) — Algorithm 2's regime split.
 UINT_KERNEL_MAX_LEN = 256
+
+# Index dtype of the device-resident pipeline (positions, counts,
+# offsets) — mirrors intersect.segment_searchsorted's choice.
+_IDX = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+_IDX_NP = np.int64 if jax.config.jax_enable_x64 else np.int32
+# Without x64, on-device counts are int32: the pipeline only engages when
+# the exact cross-product bound of the extension stays below this, so the
+# counting pass cannot wrap around.
+_COUNT_LIMIT = (1 << 62) if jax.config.jax_enable_x64 else (1 << 31) - 1
+
+_FALSEY = frozenset({"0", "off", "false", "no"})
+
+
+def _env_on(name: str, default: bool) -> bool:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    return raw.strip().lower() not in _FALSEY
+
+
+class PipelineOverflow(RuntimeError):
+    """A pipelined frontier buffer was undersized (the stats-informed
+    capacity under-estimated the true expansion).  Raised at the single
+    closing sync, BEFORE any join state was mutated.  ``needed`` carries
+    the counting pass's exact per-variable output totals fetched with
+    that same sync — the caller retries device-resident with buffers
+    sized from the measured truth (falling back to the per-extension-
+    sync host path only if that second attempt overflows too, which can
+    happen when an upstream overflow truncated the rows the later
+    counts were taken over)."""
+
+    def __init__(self, msg: str, needed: Optional[Dict[str, int]] = None):
+        super().__init__(msg)
+        self.needed = needed or {}
 
 
 class ExecBackend:
@@ -176,12 +214,23 @@ class DeviceBackend(ExecBackend):
     name = "device"
 
     def __init__(self, interpret: Optional[bool] = None,
-                 uint_max_len: int = UINT_KERNEL_MAX_LEN):
+                 uint_max_len: int = UINT_KERNEL_MAX_LEN,
+                 pipeline: Optional[bool] = None):
         super().__init__()
         self._interpret = interpret
         self._word_kernel = as_word_kernel(interpret=interpret)
         self._materialize_kernel = as_materialize_kernel(interpret=interpret)
         self._uint_max_len = uint_max_len
+        # Zero-sync extension pipeline (count-then-fill): on by default,
+        # REPRO_DEVICE_PIPELINE=off pins the per-extension-sync path as
+        # the differential oracle (Engine(device_pipeline=...) overrides).
+        self.pipeline_enabled = (_env_on("REPRO_DEVICE_PIPELINE", True)
+                                 if pipeline is None else bool(pipeline))
+        # engine-lifetime pipeline-cap feedback: bag shape -> the
+        # counting pass's measured per-variable totals from an
+        # overflow-retried execution, so repeated queries size their
+        # frontier buffers right the first time (see GenericJoin.run)
+        self.cap_feedback: Dict[Tuple, Dict[str, int]] = {}
 
         def uint_kernel(offsets, neighbors, u, v):
             return intersect_count_csr_batched(
@@ -197,6 +246,9 @@ class DeviceBackend(ExecBackend):
 
     def _count_upload(self):
         self.stats["upload.levels"] += 1
+
+    def _up_idx(self, arr) -> jnp.ndarray:
+        return jnp.asarray(np.asarray(arr, dtype=_IDX_NP))
 
     # ------------------------------------------------------------- extend
     def extend(self, infos, F: int):
@@ -218,7 +270,7 @@ class DeviceBackend(ExecBackend):
         pos_t, found = _fused_probe(values_t, lo_t, hi_t, vals_dev)
         # the ONLY host round-trip of this extension: every probe atom's
         # positions + the combined membership mask come back together.
-        pos_h, found_h, vals_h = jax.device_get((pos_t, found, vals_dev))
+        pos_h, found_h, vals_h = host_get((pos_t, found, vals_dev))
         self.stats["extend.host_syncs"] += 1
         keep = np.asarray(found_h)
         out_row = row_id[keep]
@@ -236,6 +288,437 @@ class DeviceBackend(ExecBackend):
                                  uint_max_len=self._uint_max_len,
                                  counter=self.stats, cache_tag="device",
                                  threshold=threshold)
+
+    # ---------------------------------------------- zero-sync pipeline
+    # The frontier stays device-resident between attribute extensions:
+    # each step is ONE jitted count-then-fill program (counting probe →
+    # exclusive scan → morsel-chunked fill → compaction) into a
+    # static-shaped buffer, with NO host round-trip.  The join "lands"
+    # once per query (``pipeline_land``'s host_get) when it reaches the
+    # first host-needing step — so ``extend.host_syncs`` is zero and
+    # ``extend.closing_syncs`` is one for non-materializing queries.
+
+    def pipeline_begin(self, cursors0: Dict[int, np.ndarray],
+                       ann0: Optional[np.ndarray]) -> "DeviceFrontier":
+        cursors = {k: self._up_idx(c) for k, c in cursors0.items()}
+        ann = jnp.asarray(ann0) if ann0 is not None else None
+        return DeviceFrontier(
+            cap=1, count=jnp.asarray(1, _IDX),
+            overflow=jnp.asarray(False),
+            morsels=jnp.asarray(0, _IDX),
+            cols={}, cursors=cursors, ann=ann, level_counts=[],
+            needed=[])
+
+    def pipeline_extend(self, state: "DeviceFrontier", var: str,
+                        cons: Sequence[Tuple], cap_out: int,
+                        morsel: int) -> "DeviceFrontier":
+        """One pipelined attribute extension.  ``cons`` lists
+        ``(cursor_key, trie_level, depth0)`` per constraining atom, the
+        estimated-min-property seed first.  Returns the successor state;
+        nothing touches the host."""
+        self.stats["extend.calls"] += 1
+        self.stats["extend.pipeline_extends"] += 1
+        if len(cons) > 1:
+            self.stats["pipeline.sip_extends"] += 1
+
+        def triple(key, lv, d0):
+            vals = lv.device_values(jnp.asarray,
+                                    on_upload=self._count_upload)
+            if d0:
+                return (vals, None, None)
+            offs = lv.device_offsets(self._up_idx,
+                                     on_upload=self._count_upload)
+            return (vals, offs, state.cursors[key])
+
+        seed = triple(*cons[0])
+        probes = tuple(triple(*c) for c in cons[1:])
+        probe_d0 = tuple(bool(c[2]) for c in cons[1:])
+        cons_keys = {c[0] for c in cons}
+        col_keys = list(state.cols)
+        cur_keys = [k for k in state.cursors if k not in cons_keys]
+        carry = (tuple(state.cols[k] for k in col_keys)
+                 + tuple(state.cursors[k] for k in cur_keys)
+                 + ((state.ann,) if state.ann is not None else ()))
+
+        (count, overflow, chunks, total, vals_c, p0_c, pos_c,
+         carry_c) = _pipeline_step(
+            state.count, state.overflow, seed, probes, carry,
+            cap_in=state.cap, cap_out=int(cap_out), morsel=int(morsel),
+            seed_d0=bool(cons[0][2]), probe_d0=probe_d0)
+
+        it = iter(carry_c)
+        cols = {k: next(it) for k in col_keys}
+        cursors = {k: next(it) for k in cur_keys}
+        ann = next(it) if state.ann is not None else None
+        cols[var] = vals_c
+        cursors[cons[0][0]] = p0_c
+        for (k, _lv, _d0), p in zip(cons[1:], pos_c):
+            cursors[k] = p
+        return DeviceFrontier(
+            cap=int(cap_out), count=count, overflow=overflow,
+            morsels=state.morsels + chunks, cols=cols, cursors=cursors,
+            ann=ann, level_counts=state.level_counts + [(var, count)],
+            needed=state.needed + [(var, total)])
+
+    def pipeline_terminal_fold(self, state: "DeviceFrontier", var: str,
+                               cons: Sequence[Tuple], sr: Semiring,
+                               morsel: int) -> "DeviceFrontier":
+        """Device-resident early aggregation of the last attribute: the
+        expansion is folded per source row (no materialization, so no
+        output buffer and no overflow) and rows whose candidate
+        intersection is empty are compacted away — mirroring the host
+        loop's ``_terminal_fold`` support semantics without a sync.
+
+        ``cons`` lists ``(cursor_key, trie_level, depth0, leaf_ann)``
+        per constraining atom, estimated-min-property seed first;
+        ``leaf_ann`` is the atom's annotation vector (or None) —
+        terminal atoms always exhaust their attrs here, so it is
+        multiplied into each candidate's contribution at its position.
+        """
+        self.stats["fold.calls"] += 1
+        self.stats["pipeline.device_folds"] += 1
+
+        def triple(key, lv, d0, _ann):
+            vals = lv.device_values(jnp.asarray,
+                                    on_upload=self._count_upload)
+            if d0:
+                return (vals, None, None)
+            offs = lv.device_offsets(self._up_idx,
+                                     on_upload=self._count_upload)
+            return (vals, offs, state.cursors[key])
+
+        def leaf(c):
+            if c[3] is None:
+                return None
+            return c[3].device_annotation(jnp.asarray,
+                                          on_upload=self._count_upload)
+
+        seed = triple(*cons[0])
+        probes = tuple(triple(*c) for c in cons[1:])
+        probe_d0 = tuple(bool(c[2]) for c in cons[1:])
+        leaf_anns = tuple(leaf(c) for c in cons)
+        col_keys = list(state.cols)
+        cur_keys = list(state.cursors)
+        carry = (tuple(state.cols[k] for k in col_keys)
+                 + tuple(state.cursors[k] for k in cur_keys))
+
+        count, chunks, ann_c, carry_c = _pipeline_fold(
+            state.count, seed, probes, state.ann, leaf_anns, carry,
+            cap_in=state.cap, morsel=int(morsel),
+            seed_d0=bool(cons[0][2]), probe_d0=probe_d0, sr=sr)
+
+        it = iter(carry_c)
+        cols = {k: next(it) for k in col_keys}
+        cursors = {k: next(it) for k in cur_keys}
+        return DeviceFrontier(
+            cap=state.cap, count=count, overflow=state.overflow,
+            morsels=state.morsels + chunks, cols=cols, cursors=cursors,
+            ann=ann_c, level_counts=state.level_counts + [(var, count)],
+            needed=state.needed)
+
+    def pipeline_ann_mul(self, state: "DeviceFrontier", sr: Semiring,
+                         trie, cursor_key: int) -> None:
+        """Multiply an exhausted atom's annotation into the device-
+        resident frontier annotation (eager jnp ops: async dispatch, no
+        sync).  Mirrors the host loop's leaf-annotation multiply."""
+        ann_dev = trie.device_annotation(jnp.asarray,
+                                         on_upload=self._count_upload)
+        cur = state.cursors[cursor_key]
+        n = ann_dev.shape[0]
+        leaf = ann_dev[jnp.clip(cur, 0, max(n - 1, 0))]
+        state.ann = sr.mul(state.ann, leaf.astype(state.ann.dtype))
+
+    def pipeline_land(self, state: "DeviceFrontier"):
+        """THE closing sync: fetch the compacted frontier (columns,
+        cursors, annotation), the per-level counts and the overflow flag
+        in one transfer.  Counted as ``extend.closing_syncs``."""
+        # pack the payload into three leaves (scalars / int vectors /
+        # annotation) before the transfer: per-array materialization
+        # overhead would otherwise dominate the single sync on small
+        # frontiers.  Every live vector shares the final capacity, so
+        # one stacked matrix carries them all.
+        scal = jnp.stack(
+            [state.count.astype(_IDX), state.overflow.astype(_IDX),
+             state.morsels.astype(_IDX)]
+            + [c.astype(_IDX) for _v, c in state.level_counts]
+            + [t.astype(_IDX) for _v, t in state.needed])
+        col_keys = list(state.cols)
+        cur_keys = list(state.cursors)
+        vecs = ([state.cols[k].astype(_IDX) for k in col_keys]
+                + [state.cursors[k] for k in cur_keys])
+        packed = jnp.stack(vecs) if vecs else None
+        scal_h, packed_h, ann = host_get((scal, packed, state.ann))
+        self.stats["extend.closing_syncs"] += 1
+        nl = len(state.level_counts)
+        count, overflow, morsels = (int(scal_h[0]), bool(scal_h[1]),
+                                    int(scal_h[2]))
+        self.stats["pipeline.morsels"] += morsels
+        levels = [(v, int(c)) for (v, _), c in
+                  zip(state.level_counts, scal_h[3:3 + nl])]
+        needed = {v: int(t) for (v, _), t in
+                  zip(state.needed, scal_h[3 + nl:])}
+        cols = {k: packed_h[i] for i, k in enumerate(col_keys)}
+        cursors = {k: packed_h[len(col_keys) + i]
+                   for i, k in enumerate(cur_keys)}
+        return (count, overflow, cols, cursors, ann, levels, needed)
+
+
+@dataclasses.dataclass
+class DeviceFrontier:
+    """Device-resident Generic-Join frontier between pipelined
+    extensions.  All buffers are static-shaped ``[cap]``; ``count`` (a
+    device scalar) marks the live prefix and slots past it hold garbage
+    that every consumer masks.  ``overflow`` is sticky: set when a
+    counting pass found more rows than the buffer holds, read exactly
+    once at the closing sync."""
+
+    cap: int                            # static buffer capacity
+    count: jnp.ndarray                  # [] live rows
+    overflow: jnp.ndarray               # [] bool, sticky
+    morsels: jnp.ndarray                # [] fill chunks actually run
+    cols: Dict[str, jnp.ndarray]        # var -> int32 [cap]
+    cursors: Dict[int, jnp.ndarray]     # id(atom) -> positions [cap]
+    ann: Optional[jnp.ndarray]          # semiring annotation [cap]
+    level_counts: List                  # [(var, count snapshot)]
+    needed: List                        # [(var, counting-pass total)]
+
+
+def _bounds(values, offsets, cursor, cap_in, valid):
+    """Per-row candidate bounds [cap_in] of one atom, on device: the
+    whole level at depth 0 (no cursor), else the cursor's CSR segment.
+    Dead rows get an empty segment."""
+    n = values.shape[0]
+    if cursor is None:
+        lo = jnp.zeros(cap_in, _IDX)
+        hi = jnp.full(cap_in, n, _IDX)
+    else:
+        c = jnp.clip(cursor, 0, offsets.shape[0] - 2)
+        lo = offsets[c]
+        hi = offsets[c + 1]
+    lo = jnp.where(valid, lo, 0)
+    hi = jnp.where(valid, hi, 0)
+    return lo, hi
+
+
+@partial(jax.jit, static_argnames=("cap_in", "cap_out", "morsel",
+                                   "seed_d0", "probe_d0"))
+def _pipeline_step(count, overflow, seed, probes, carry, *,
+                   cap_in: int, cap_out: int, morsel: int,
+                   seed_d0: bool, probe_d0: Tuple[bool, ...]):
+    """One zero-sync attribute extension: count-then-fill in one program.
+
+    1. counting probe: per-row seed-segment sizes, narrowed by sideways
+       min/max information from every later (probe) atom;
+    2. exclusive scan -> per-row output offsets + total (the overflow
+       check against the static capacity);
+    3. fill: ``morsel``-sized chunks invert the offsets (searchsorted)
+       to seed positions, gather values and probe every other atom with
+       the branch-free lockstep search — oversized frontiers just spill
+       to the next chunk of the same loop instead of a host round-trip;
+    4. compaction: scatter surviving rows to a dense prefix and gather
+       the previous frontier's columns/cursors/annotation through them.
+
+    Output ordering (frontier-row-major, values ascending within a row)
+    is identical to the host path's, so results match exactly.
+    """
+    seed_values, seed_offsets, seed_cursor = seed
+    n0 = seed_values.shape[0]
+    valid = jnp.arange(cap_in, dtype=_IDX) < count
+    lo0, hi0 = _bounds(seed_values, seed_offsets, seed_cursor, cap_in,
+                       valid)
+
+    # ---- sideways information passing: clip the seed segment to the
+    # [max(mins), min(maxs)] envelope of the probe atoms' candidate
+    # ranges — rows outside it would fail every probe anyway, so the
+    # result set (and ordering) is unchanged while the expansion shrinks.
+    bounds = []
+    alive = valid
+    gmin = gmax = None
+    for (vals_k, offs_k, cur_k), d0 in zip(probes, probe_d0):
+        nk = vals_k.shape[0]
+        lo_k, hi_k = _bounds(vals_k, offs_k, cur_k, cap_in, valid)
+        alive = alive & (lo_k < hi_k)
+        mn = vals_k[jnp.clip(lo_k, 0, nk - 1)]
+        mx = vals_k[jnp.clip(hi_k - 1, 0, nk - 1)]
+        gmin = mn if gmin is None else jnp.maximum(gmin, mn)
+        gmax = mx if gmax is None else jnp.minimum(gmax, mx)
+        bounds.append((vals_k, lo_k, hi_k))
+    if probes:
+        p_lo, _ = I.segment_searchsorted(seed_values, lo0, hi0, gmin)
+        p_hi, f_hi = I.segment_searchsorted(seed_values, lo0, hi0, gmax)
+        lo0 = p_lo.astype(_IDX)
+        hi0 = (p_hi + f_hi).astype(_IDX)
+
+    # ---- counting pass + exclusive scan
+    cnt = jnp.where(alive, jnp.maximum(hi0 - lo0, 0), 0).astype(_IDX)
+    offs = jnp.cumsum(cnt) - cnt
+    total = offs[-1] + cnt[-1]
+    overflow = overflow | (total > cap_out)
+    total_c = jnp.minimum(total, cap_out)
+
+    # ---- fill: morsel-chunked expand-and-probe into static buffers
+    nchunks = cap_out // morsel
+    bufs = (jnp.zeros(cap_out, jnp.int32),              # values
+            jnp.zeros(cap_out, _IDX),                   # source row
+            jnp.zeros(cap_out, _IDX),                   # seed positions
+            tuple(jnp.zeros(cap_out, _IDX) for _ in probes),
+            jnp.zeros(cap_out, jnp.bool_))              # keep mask
+
+    def cond(st):
+        c = st[0]
+        return (c < nchunks) & (c * morsel < total_c)
+
+    def body(st):
+        c, vals_b, row_b, p0_b, pos_bs, keep_b = st
+        j = c * morsel + jnp.arange(morsel, dtype=_IDX)
+        row = jnp.clip(jnp.searchsorted(offs, j, side="right") - 1,
+                       0, cap_in - 1).astype(_IDX)
+        p0 = lo0[row] + (j - offs[row])
+        live = j < total_c
+        vals = seed_values[jnp.clip(p0, 0, max(n0 - 1, 0))]
+        keep = live
+        poss = []
+        for vals_k, lo_k, hi_k in bounds:
+            pk, fk = I.segment_searchsorted(vals_k, lo_k[row], hi_k[row],
+                                            vals)
+            poss.append(pk.astype(_IDX))
+            keep = keep & fk
+        at = (c * morsel,)
+        vals_b = lax.dynamic_update_slice(vals_b, vals, at)
+        row_b = lax.dynamic_update_slice(row_b, row, at)
+        p0_b = lax.dynamic_update_slice(p0_b, p0, at)
+        pos_bs = tuple(lax.dynamic_update_slice(b, p, at)
+                       for b, p in zip(pos_bs, poss))
+        keep_b = lax.dynamic_update_slice(keep_b, keep, at)
+        return (c + 1, vals_b, row_b, p0_b, pos_bs, keep_b)
+
+    st = lax.while_loop(cond, body, (jnp.asarray(0, _IDX),) + bufs)
+    chunks, vals_b, row_b, p0_b, pos_bs, keep = st
+
+    # ---- compaction: dense prefix of surviving rows (order-preserving)
+    widx = jnp.cumsum(keep.astype(_IDX)) - 1
+    new_count = (widx[-1] + 1).astype(_IDX)
+    scat = jnp.where(keep, widx, cap_out)
+
+    def compact(x):
+        return jnp.zeros((cap_out,), x.dtype).at[scat].set(x, mode="drop")
+
+    vals_c = compact(vals_b)
+    row_c = compact(row_b)
+    p0_c = compact(p0_b)
+    pos_c = tuple(compact(p) for p in pos_bs)
+    rowg = jnp.clip(row_c, 0, cap_in - 1)
+    carry_c = tuple(g[rowg] for g in carry)
+    # ``total`` is the UNCAPPED counting-pass truth: landed with the
+    # closing sync so an overflow retry can size this buffer exactly
+    return new_count, overflow, chunks, total, vals_c, p0_c, pos_c, carry_c
+
+
+@partial(jax.jit, static_argnames=("cap_in", "morsel", "seed_d0",
+                                   "probe_d0", "sr"))
+def _pipeline_fold(count, seed, probes, ann, leaf_anns, carry, *,
+                   cap_in: int, morsel: int, seed_d0: bool,
+                   probe_d0: Tuple[bool, ...], sr: Semiring):
+    """Terminal-fold companion of ``_pipeline_step``: identical counting
+    pass and morsel-chunked expand-and-probe, but each surviving
+    candidate's semiring contribution is segment-reduced straight onto
+    its source row — nothing is materialized, so no output capacity and
+    no overflow.  Returns the support-compacted frontier (rows with an
+    empty candidate intersection are NOT derived — same rule as the host
+    fold, which Table 7's SSSP catches when violated)."""
+    seed_values, seed_offsets, seed_cursor = seed
+    n0 = seed_values.shape[0]
+    valid = jnp.arange(cap_in, dtype=_IDX) < count
+    lo0, hi0 = _bounds(seed_values, seed_offsets, seed_cursor, cap_in,
+                       valid)
+
+    bounds = []
+    alive = valid
+    gmin = gmax = None
+    for (vals_k, offs_k, cur_k), d0 in zip(probes, probe_d0):
+        nk = vals_k.shape[0]
+        lo_k, hi_k = _bounds(vals_k, offs_k, cur_k, cap_in, valid)
+        alive = alive & (lo_k < hi_k)
+        mn = vals_k[jnp.clip(lo_k, 0, nk - 1)]
+        mx = vals_k[jnp.clip(hi_k - 1, 0, nk - 1)]
+        gmin = mn if gmin is None else jnp.maximum(gmin, mn)
+        gmax = mx if gmax is None else jnp.minimum(gmax, mx)
+        bounds.append((vals_k, lo_k, hi_k))
+    if probes:
+        p_lo, _ = I.segment_searchsorted(seed_values, lo0, hi0, gmin)
+        p_hi, f_hi = I.segment_searchsorted(seed_values, lo0, hi0, gmax)
+        lo0 = p_lo.astype(_IDX)
+        hi0 = (p_hi + f_hi).astype(_IDX)
+
+    cnt = jnp.where(alive, jnp.maximum(hi0 - lo0, 0), 0).astype(_IDX)
+    offs = jnp.cumsum(cnt) - cnt
+    total = offs[-1] + cnt[-1]
+
+    plain = not probes and all(la is None for la in leaf_anns)
+    if plain and sr.name == "count":
+        # counting a bare segment needs no expansion at all: the
+        # counting pass IS the fold (e.g. lollipop's pendant edge)
+        folded = cnt.astype(sr.dtype)
+        supp = cnt
+        chunks = jnp.asarray(0, _IDX)
+    else:
+        zero = jnp.asarray(sr.zero, dtype=sr.dtype)
+
+        def cond(st):
+            c = st[0]
+            return c * morsel < total
+
+        def body(st):
+            c, folded_b, supp_b = st
+            j = c * morsel + jnp.arange(morsel, dtype=_IDX)
+            row = jnp.clip(jnp.searchsorted(offs, j, side="right") - 1,
+                           0, cap_in - 1).astype(_IDX)
+            p0 = lo0[row] + (j - offs[row])
+            live = j < total
+            vals = seed_values[jnp.clip(p0, 0, max(n0 - 1, 0))]
+            keep = live
+            poss = [p0]
+            for vals_k, lo_k, hi_k in bounds:
+                pk, fk = I.segment_searchsorted(vals_k, lo_k[row],
+                                                hi_k[row], vals)
+                poss.append(pk.astype(_IDX))
+                keep = keep & fk
+            contrib = sr.lift(morsel)
+            for la, pos in zip(leaf_anns, poss):
+                if la is None:
+                    continue
+                nl = la.shape[0]
+                at = la[jnp.clip(pos, 0, max(nl - 1, 0))]
+                contrib = sr.mul(contrib, at.astype(sr.dtype))
+            contrib = jnp.where(keep, contrib, zero)
+            seg = row.astype(jnp.int32)
+            folded_b = sr.add(folded_b,
+                              sr.segment_reduce(contrib, seg, cap_in))
+            supp_b = supp_b + jax.ops.segment_sum(
+                keep.astype(_IDX), seg, num_segments=cap_in)
+            return (c + 1, folded_b, supp_b)
+
+        st = lax.while_loop(
+            cond, body,
+            (jnp.asarray(0, _IDX),
+             jnp.full((cap_in,), sr.zero, dtype=sr.dtype),
+             jnp.zeros(cap_in, _IDX)))
+        chunks, folded, supp = st
+
+    ann_new = sr.mul(ann, folded.astype(ann.dtype))
+    support = supp > 0
+
+    # ---- support compaction (order-preserving dense prefix)
+    widx = jnp.cumsum(support.astype(_IDX)) - 1
+    new_count = jnp.where(support.any(), widx[-1] + 1, 0).astype(_IDX)
+    scat = jnp.where(support, widx, cap_in)
+
+    def compact(x):
+        return jnp.zeros((cap_in,), x.dtype).at[scat].set(x, mode="drop")
+
+    ann_c = compact(ann_new)
+    carry_c = tuple(compact(g) for g in carry)
+    return new_count, chunks, ann_c, carry_c
 
 
 @jax.jit

@@ -53,6 +53,12 @@ from repro.core.trie import Trie
 # the differential-testing oracle the parity tests compare against.
 DEVICE_RECURSION_ENV = "REPRO_DEVICE_RECURSION"
 
+# Escape hatch for the zero-sync extension pipeline (default on under the
+# device backend): "off" pins the per-extension-sync expand-and-probe
+# path as the differential oracle.  Resolved by the backend at
+# construction (core.backend); Engine(device_pipeline=...) overrides.
+DEVICE_PIPELINE_ENV = "REPRO_DEVICE_PIPELINE"
+
 # Static plan verification (repro.analysis.plan_verify) over every lowered
 # physical plan, default ON: the validator is cheap (pure structural walk)
 # relative to planning itself. "REPRO_VERIFY_PLANS=off" is the escape
@@ -74,6 +80,10 @@ def _env_flag(name: str, default: bool) -> bool:
 
 def device_recursion_enabled(default: bool = True) -> bool:
     return _env_flag(DEVICE_RECURSION_ENV, default)
+
+
+def device_pipeline_enabled(default: bool = True) -> bool:
+    return _env_flag(DEVICE_PIPELINE_ENV, default)
 
 
 def verify_plans_enabled(default: bool = True) -> bool:
@@ -119,6 +129,7 @@ class Engine:
     def __init__(self, use_ghd: bool = True, use_codegen: bool = True,
                  backend=None, plan_search: Optional[bool] = None,
                  device_recursion: Optional[bool] = None,
+                 device_pipeline: Optional[bool] = None,
                  verify_plans: Optional[bool] = None,
                  sanitize: Optional[bool] = None):
         self.catalog = Catalog()
@@ -126,6 +137,15 @@ class Engine:
         self.use_codegen = use_codegen
         # backend: ExecBackend | "numpy" | "device" | None (env-resolved)
         self.backend: ExecBackend = make_backend(backend)
+        # zero-sync extension pipeline (count-then-fill, core.backend):
+        # None keeps the backend's own REPRO_DEVICE_PIPELINE resolution;
+        # an explicit bool overrides it (device_pipeline=False pins the
+        # per-extension-sync path as the differential oracle)
+        if device_pipeline is not None and hasattr(self.backend,
+                                                   "pipeline_enabled"):
+            self.backend.pipeline_enabled = bool(device_pipeline)
+        self.device_pipeline = bool(getattr(self.backend,
+                                            "pipeline_enabled", False))
         # cost-based GHD + attribute-order search (core.plan_search); None
         # defers to REPRO_PLAN_SEARCH (default on, "off" = the seed
         # appearance-order plan, kept as the differential-testing oracle)

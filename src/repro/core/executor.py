@@ -44,6 +44,13 @@ from repro.core.datalog import eval_expr
 from repro.core.gj import GenericJoin, GJResult
 from repro.core.trie import Trie
 
+# backend dispatch counters snapshotted around each bag run; "syncs" in
+# per-bag metrics is the delta of these (the zero-host-sync invariant —
+# ROADMAP item 3 — is stated and gated per query, not per process)
+_SYNC_KEYS = ("extend.calls", "extend.host_syncs", "extend.closing_syncs",
+              "extend.pipeline_extends", "pipeline.device_folds",
+              "pipeline.retries", "pipeline.morsels")
+
 
 @dataclasses.dataclass
 class ExecStats:
@@ -216,8 +223,8 @@ class Executor:
                     self.stats.bags_cached += 1
                     res = rename_result(res, out_vars)
                 else:
-                    res, level_actuals = self._run_bag(bops, results,
-                                                       aggregate, lplan)
+                    res, level_actuals, syncs = self._run_bag(
+                        bops, results, aggregate, lplan)
                     self.stats.bags_run += 1
                     if self.bag_cache is not None:
                         self.bag_cache.put(ck, res)
@@ -225,6 +232,7 @@ class Executor:
                         "est_rows": float(bops.materialize.est_rows),
                         "actual_rows": int(res.num_rows),
                         "level_actuals": level_actuals,
+                        "syncs": syncs,
                     }
                 dedup_cache[key] = res
             results[bops.materialize.op_id] = res
@@ -265,9 +273,15 @@ class Executor:
                          bops.materialize.output_vars,
                          semiring=semiring, selections=selections,
                          backend=self.backend, hints=bops.hints())
+        # per-bag host-sync accounting: the zero-sync invariant is
+        # per-query, so the bench artifact needs the delta, not the
+        # backend's process-cumulative counters
+        snap = {k: gj.backend.stats.get(k, 0) for k in _SYNC_KEYS}
         res = gj.run()
+        syncs = {k: gj.backend.stats.get(k, 0) - snap[k]
+                 for k in _SYNC_KEYS}
         self.stats.intersect_rows += res.num_rows
-        return res, gj.level_actuals
+        return res, gj.level_actuals, syncs
 
     def _final_join(self, pplan, results: Dict[int, GJResult]) -> GJResult:
         """The IR's TopDownJoin: one acyclic WCO join over the reduced bag

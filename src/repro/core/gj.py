@@ -32,11 +32,13 @@ resolved from ``REPRO_ENGINE_BACKEND``.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import backend as backend_mod
+from repro.core import statistics as stats_mod
 from repro.core.semiring import COUNT, Semiring
 from repro.core.trie import Trie
 
@@ -91,6 +93,240 @@ class GJResult:
     def scalar(self):
         assert not self.vars
         return self.annotation
+
+
+class _PipelineDriver:
+    """Drives the backend's zero-sync extension pipeline for one run.
+
+    The frontier lives on device between extensions; BoundAtom state is
+    NOT mutated until the single closing sync succeeds — atom depths are
+    shadowed here, so an overflow (undersized buffer) can abort with the
+    join untouched and the caller re-runs on the host path.  ``finish``
+    lands the device state back into the host loop's representation:
+    frontier columns, atom cursors/depths, annotation, level actuals.
+    """
+
+    def __init__(self, gj: "GenericJoin", exact_caps: bool = False,
+                 needed: Optional[Dict[str, int]] = None):
+        self.gj = gj
+        self.backend = gj.backend
+        self.depth = {id(a): a.depth for a in gj.atoms}
+        self.state = None
+        # overflow-retry mode: ignore the stats-informed targets and size
+        # each buffer from the aborted attempt's counting-pass totals
+        # (``needed``), or at the exact cross-product bound when no
+        # measurement exists for the variable (steps whose bound exceeds
+        # PIPELINE_MAX_BUFFER land instead)
+        self.exact_caps = exact_caps
+        self.needed = needed or {}
+        # sound host-side bound on the live row count (min of the running
+        # cross-product bound and each buffer capacity) — sizes the next
+        # step's cross clamp and the int32 counting-overflow guard
+        self.bound = 1
+        h = gj.hints
+        raw = os.environ.get("REPRO_MORSEL_SIZE")
+        # env-pinned morsels stay exact (test/debug knob); otherwise the
+        # per-step effective morsel scales with the buffer so the
+        # sequential fill loop stays a bounded number of chunks
+        self.morsel_pinned = bool(raw)
+        if raw:
+            self.morsel = max(8, int(raw))
+        elif h is not None and h.morsel:
+            self.morsel = int(h.morsel)
+        else:
+            self.morsel = stats_mod.DEFAULT_MORSEL
+
+    def _effective_morsel(self, cap: int) -> int:
+        if self.morsel_pinned:
+            return self.morsel
+        # doubled from the base morsel (so jit specializations bucket)
+        # until the chunk loop is at most 2^MORSEL_CHUNK_SHIFT long
+        target = cap >> stats_mod.MORSEL_CHUNK_SHIFT
+        m = self.morsel
+        while m < target:
+            m <<= 1
+        return m
+
+    def _next_var(self, a: BoundAtom) -> Optional[str]:
+        d = self.depth[id(a)]
+        return a.vars[d] if d < len(a.vars) else None
+
+    def try_step(self, v: str, terminal: bool) -> bool:
+        """Run one attribute extension (or terminal fold) on device if
+        eligible; False means the caller must land and continue on the
+        host path (pair-kernel-routed steps, or un-sizable buffers)."""
+        gj = self.gj
+        cons = [a for a in gj.atoms if self._next_var(a) == v]
+        assert cons, f"variable {v} unconstrained at its turn"
+        if terminal:
+            return self._terminal_step(v, cons)
+        h = gj.hints
+        if h is not None and len(cons) == 2:
+            # mirror _extend_pair_store's runtime guards against the SHADOW
+            # depths: the layout store serves binary self-join expansions
+            # from host cursors, so land first when this step would route
+            # there.  (terminal_routing == "pair_kernel" only matters at
+            # the terminal fold, which lands unconditionally above.)
+            a, b = cons
+            if ((h.extend_routing or {}).get(v) == "pair_store"
+                    and a.trie is b.trie and a.trie.arity == 2
+                    and self.depth[id(a)] == 1 and self.depth[id(b)] == 1
+                    and self.backend.has_pair_store(
+                        a.trie, threshold=h.layout_threshold)):
+                return False
+        # ---- exact cross-product bound from the live tries (sound: the
+        # expansion of one row cannot exceed the smallest constraining
+        # atom's worst-case segment)
+        branch = None
+        infos = []
+        for a in cons:
+            d = self.depth[id(a)]
+            lv = a.trie.levels[d]
+            if lv.size == 0:
+                return False        # empty candidates: host path handles
+            ts = stats_mod.collect_trie_stats(a.trie).levels[d]
+            b = lv.size if d == 0 else int(ts.max_fanout)
+            mass = float(lv.size) if d == 0 else float(ts.mean_fanout)
+            branch = b if branch is None else min(branch, b)
+            infos.append((a, d, mass))
+        cross = self.bound * max(branch, 0)
+        if cross > backend_mod._COUNT_LIMIT:
+            return False            # int32 counting pass could wrap
+        # the counting pass's measured output size — from this query's
+        # aborted attempt or a previous execution of the same bag shape
+        # (engine-lifetime feedback) — beats any stats estimate
+        est = self.needed.get(v)
+        if est is None and not self.exact_caps \
+                and h is not None and h.extend_caps:
+            est = h.extend_caps.get(v)
+        if est is None:
+            # no stats-informed target (direct construction, top-down
+            # join): the exact cross bound is itself a sound capacity
+            if cross > stats_mod.PIPELINE_MAX_BUFFER:
+                return False
+            est = float(cross)
+        cap_out = stats_mod.frontier_capacity(est, cross, self.morsel)
+        # ---- engage: estimated min-property seed first
+        infos.sort(key=lambda t: t[2])
+        if self.state is None:
+            self._begin()
+        cons_desc = [(id(a), a.trie.levels[d], d == 0)
+                     for a, d, _m in infos]
+        self.state = self.backend.pipeline_extend(
+            self.state, v, cons_desc, cap_out,
+            self._effective_morsel(cap_out))
+        self.bound = min(cross, cap_out)
+        sr = gj.semiring
+        for a, d, _m in infos:
+            self.depth[id(a)] = d + 1
+            if (sr is not None and d + 1 == len(a.trie.attrs)
+                    and a.trie.annotation is not None):
+                self.backend.pipeline_ann_mul(self.state, sr, a.trie,
+                                              id(a))
+        return True
+
+    def _terminal_step(self, v: str, cons: List[BoundAtom]) -> bool:
+        """Early-aggregate the terminal attribute on device when the
+        host fold would otherwise materialize the expansion through a
+        per-extension sync.  Lands (False) only for the pair-kernel
+        routes — the Pallas AND+popcount / cohort-materialize paths need
+        host cursors and are themselves extension-sync-free."""
+        gj = self.gj
+        sr = gj.semiring
+        h = gj.hints
+        if sr is None or not hasattr(self.backend,
+                                     "pipeline_terminal_fold"):
+            return False
+        has_ann = any(a.trie.annotation is not None for a in cons)
+        if len(cons) == 2:
+            a, b = cons
+            pair_shape = (a.trie is b.trie and a.trie.arity == 2
+                          and self.depth[id(a)] == 1
+                          and self.depth[id(b)] == 1
+                          and self.backend.has_pair_store(
+                              a.trie,
+                              threshold=(h.layout_threshold
+                                         if h else None)))
+            routed_off = h is not None and h.terminal_routing == "search"
+            if pair_shape and sr is COUNT and not has_ann \
+                    and not routed_off:
+                return False        # host pair_count kernel (no sync)
+            if pair_shape and h is not None \
+                    and h.terminal_routing == "pair_kernel":
+                return False        # host pair materialize route
+        branch = None
+        infos = []
+        for a in cons:
+            d = self.depth[id(a)]
+            lv = a.trie.levels[d]
+            if lv.size == 0:
+                return False
+            ts = stats_mod.collect_trie_stats(a.trie).levels[d]
+            b = lv.size if d == 0 else int(ts.max_fanout)
+            mass = float(lv.size) if d == 0 else float(ts.mean_fanout)
+            branch = b if branch is None else min(branch, b)
+            infos.append((a, d, mass))
+        cross = self.bound * max(branch, 0)
+        if cross > backend_mod._COUNT_LIMIT:
+            return False            # int32 counting pass could wrap
+        infos.sort(key=lambda t: t[2])
+        if self.state is None:
+            self._begin()
+        cons_desc = [
+            (id(a), a.trie.levels[d], d == 0,
+             a.trie if a.trie.annotation is not None else None)
+            for a, d, _m in infos]
+        # the fold never allocates an output buffer, so its morsel is
+        # sized off the candidate-total bound to keep the sequential
+        # chunk loop short.  Float semirings are chunk-order-sensitive:
+        # partial sums across fill chunks re-associate the reduction and
+        # shift the last ulp vs the host fold's single segment reduce —
+        # those fold in ONE chunk (bitwise-identical order) or land when
+        # the candidate bound exceeds the buffer ceiling.
+        if np.issubdtype(np.dtype(sr.dtype), np.floating):
+            if cross > stats_mod.PIPELINE_MAX_BUFFER:
+                return False
+            morsel = 1 << max(3, (int(cross) - 1).bit_length())
+        else:
+            morsel = self._effective_morsel(
+                min(cross, stats_mod.PIPELINE_MAX_BUFFER))
+        self.state = self.backend.pipeline_terminal_fold(
+            self.state, v, cons_desc, sr, morsel)
+        return True
+
+    def _begin(self) -> None:
+        gj = self.gj
+        cursors0 = {id(a): a.cursor for a in gj.atoms
+                    if a.cursor is not None}
+        ann0 = (np.asarray(gj.semiring.lift(1))
+                if gj.semiring is not None else None)
+        self.state = self.backend.pipeline_begin(cursors0, ann0)
+
+    def finish(self):
+        """Land: one closing sync, then write the fetched state back into
+        the host representation.  Raises PipelineOverflow (before any
+        mutation) when a buffer was undersized."""
+        gj = self.gj
+        if self.state is None:
+            ann = (np.asarray(gj.semiring.lift(1))
+                   if gj.semiring is not None else None)
+            return {}, ann, 1
+        (count, overflow, cols, cursors, ann,
+         levels, needed) = self.backend.pipeline_land(self.state)
+        if overflow:
+            raise backend_mod.PipelineOverflow(
+                f"frontier buffer overflow landing {gj.var_order}",
+                needed=needed)
+        n = count
+        frontier = {k: np.asarray(c)[:n] for k, c in cols.items()}
+        for a in gj.atoms:
+            k = id(a)
+            if k in cursors:
+                a.cursor = np.asarray(cursors[k])[:n].astype(np.int64)
+            a.depth = self.depth[k]
+        gj.level_actuals.extend(levels)
+        ann = np.asarray(ann)[:n] if ann is not None else None
+        return frontier, ann, n
 
 
 class GenericJoin:
@@ -178,6 +414,61 @@ class GenericJoin:
 
     # ------------------------------------------------------------------ run
     def run(self) -> GJResult:
+        """Execute the join.  On the DeviceBackend with the zero-sync
+        pipeline enabled, attribute extensions run device-resident with
+        ONE closing sync; an undersized buffer (stats under-estimate)
+        aborts before any state mutation and retries device-resident
+        with count-informed capacities, using the per-extension-sync
+        host path only as the last resort."""
+        if (getattr(self.backend, "pipeline_enabled", False)
+                and hasattr(self.backend, "pipeline_extend")):
+            # overflow-retry loop: an aborted attempt's closing sync
+            # carries the counting pass's exact per-variable totals, so
+            # the retry re-sizes each buffer from measured truth instead
+            # of the (often wildly loose) cross-product bound.  A step
+            # AFTER an overflowed one counted over a truncated frontier,
+            # so its total is only a lower bound — but every retry's
+            # counts are taken over fuller frontiers, so the measurements
+            # grow monotonically and the loop converges device-resident
+            # in at most one attempt per variable.
+            # engine-lifetime cap feedback: a previous execution of this
+            # same bag shape that overflowed recorded its measured
+            # totals on the backend — seed from them so repeated queries
+            # size their buffers right the FIRST time.  Stale entries
+            # (relation reloaded under the same name) self-correct:
+            # under-sized measurements re-overflow into this same loop,
+            # over-sized ones are clamped by the live cross bound.
+            fb_key = (self.var_order,
+                      tuple((a.trie.name, tuple(a.vars))
+                            for a in self.atoms))
+            feedback = getattr(self.backend, "cap_feedback", None)
+            needed: Dict[str, int] = {}
+            if feedback is not None:
+                needed.update(feedback.get(fb_key, {}))
+            measured = False
+            for attempt in range(len(self.var_order) + 1):
+                try:
+                    res = self._run(pipelined=True,
+                                    exact_caps=attempt > 0,
+                                    needed=needed or None)
+                    if measured and feedback is not None:
+                        feedback[fb_key] = dict(needed)
+                    return res
+                except backend_mod.PipelineOverflow as ovf:
+                    self.backend.stats["pipeline.retries"] += 1
+                    self.level_actuals = []
+                    grew = False
+                    for v, t in ovf.needed.items():
+                        if t > needed.get(v, 0):
+                            needed[v] = t
+                            grew = True
+                            measured = True
+                    if not grew:  # pragma: no cover — measurement stuck
+                        break
+        return self._run(pipelined=False)
+
+    def _run(self, pipelined: bool = False, exact_caps: bool = False,
+             needed: Optional[Dict[str, int]] = None) -> GJResult:
         sr = self.semiring
         F = 1
         frontier: Dict[str, np.ndarray] = {}
@@ -189,14 +480,24 @@ class GenericJoin:
             if a.cursor is not None and len(a.cursor) != F:
                 a.cursor = np.broadcast_to(a.cursor, (F,)).copy()
 
+        pipe = (_PipelineDriver(self, exact_caps=exact_caps,
+                                needed=needed)
+                if pipelined else None)
         out_set = set(self.output_vars)
         for vi, v in enumerate(self.var_order):
-            cons = [a for a in atoms if a.next_var() == v]
-            assert cons, f"variable {v} unconstrained at its turn"
             remaining = self.var_order[vi + 1:]
             # Early-aggregation fast path: the last attribute, not retained,
             # folds without materializing (e.g. |N(x) ∩ N(y)| for triangles).
             terminal = sr is not None and v not in out_set and not remaining
+            if pipe is not None:
+                if pipe.try_step(v, terminal):
+                    continue
+                # first host-needing step: land the device frontier (the
+                # query's single closing sync) and continue below
+                frontier, ann, F = pipe.finish()
+                pipe = None
+            cons = [a for a in atoms if a.next_var() == v]
+            assert cons, f"variable {v} unconstrained at its turn"
             if terminal:
                 fold, support = self._terminal_fold(cons, F)
                 ann = sr.mul(ann, fold) if ann is not None else fold
@@ -245,6 +546,11 @@ class GenericJoin:
                     else:
                         empty_ann = np.asarray(sr.zero, dtype=dt)
                 return GJResult(self.output_vars, empty_cols, empty_ann)
+
+        if pipe is not None:
+            # every attribute extended on device: land once, project below
+            frontier, ann, F = pipe.finish()
+            pipe = None
 
         # ---------------- project to output vars
         cols = {k: frontier[k] for k in self.output_vars if k in frontier}

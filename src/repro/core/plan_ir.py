@@ -114,6 +114,14 @@ class Extend(PlanOp):
     # the HybridSetStore can serve cohort-routed (bitset extraction for
     # dense pairs); "search" keeps the generic expand-and-probe path.
     routing: str = "search"
+    # Zero-sync pipeline annotations (core.backend.DeviceBackend): the
+    # stats-informed frontier-buffer allocation target (AGM-capped
+    # est_rows with statistics.CAP_HEADROOM slack — the runtime clamps it
+    # further to the exact cross-product bound of the live tries) and the
+    # stats-chosen morsel (fill-chunk) size.  None = statistics were
+    # unavailable; the pipeline then refuses to size a buffer from it.
+    frontier_cap: Optional[float] = None
+    morsel: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -150,6 +158,13 @@ class BagHints:
     # var -> "pair_store" for materializing extensions routed through the
     # layout store (None/missing var = generic search path)
     extend_routing: Optional[Dict[str, str]] = None
+    # var -> stats-informed frontier-buffer allocation target for the
+    # zero-sync extension pipeline (Extend.frontier_cap); missing var or
+    # None hints disengage the pipeline for that step.
+    extend_caps: Optional[Dict[str, float]] = None
+    # stats-chosen morsel size for the pipelined fill loop
+    # (REPRO_MORSEL_SIZE overrides at run time)
+    morsel: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -165,15 +180,24 @@ class BagOps:
         thr = None
         routing = None
         ext_routing = {}
+        ext_caps = {}
+        morsel = None
         for s in self.steps:
             if isinstance(s, TerminalFold):
                 thr = s.layout_threshold
                 routing = s.routing
-            elif isinstance(s, Extend) and s.routing != "search":
-                ext_routing[s.var] = s.routing
+            elif isinstance(s, Extend):
+                if s.routing != "search":
+                    ext_routing[s.var] = s.routing
+                if s.frontier_cap is not None:
+                    ext_caps[s.var] = s.frontier_cap
+                if s.morsel is not None:
+                    morsel = s.morsel
         return BagHints(layout_threshold=thr, terminal_routing=routing,
                         est_rows=self.materialize.est_rows,
-                        extend_routing=ext_routing or None)
+                        extend_routing=ext_routing or None,
+                        extend_caps=ext_caps or None,
+                        morsel=morsel)
 
 
 @dataclasses.dataclass
@@ -222,6 +246,11 @@ class PhysicalPlan:
                                   "est_fanout": float(s.est_fanout),
                                   "est_rows": float(s.est_rows),
                                   "routing": s.routing,
+                                  "frontier_cap":
+                                      float(s.frontier_cap)
+                                      if s.frontier_cap is not None
+                                      else None,
+                                  "morsel": s.morsel,
                                   "cost": float(s.cost)})
                 else:
                     steps.append({"op": "terminal_fold", "var": s.var,
@@ -382,14 +411,31 @@ def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
                 ext_routing = _extend_routing(
                     accesses, advancing_atoms, advancing_children,
                     atom_keys, atom_arity, depth)
-                cost = S.extension_cost(rows_into_last, min_cand, max_cand,
-                                        len(cons))
+                # stats-informed allocation target for the zero-sync
+                # pipeline's static frontier buffer (AGM-capped estimate
+                # with headroom; the runtime clamps to the exact
+                # cross-product bound of the live tries).  The buffer is
+                # zeroed/scattered whole, so its size is costed — the
+                # plan search prefers orders with tighter intermediates.
+                cap = min(frontier * S.CAP_HEADROOM,
+                          float(S.PIPELINE_MAX_BUFFER))
+                cost = (S.extension_cost(rows_into_last, min_cand,
+                                         max_cand, len(cons))
+                        + S.buffer_cost(cap))
                 steps.append(reg(Extend(new_id(), frontier, cost, v,
-                                        len(cons), fanout, ext_routing)))
+                                        len(cons), fanout, ext_routing,
+                                        frontier_cap=cap)))
             for i in advancing_atoms:
                 depth[i] += 1
             for i in advancing_children:
                 cdepth[i] += 1
+        # stats-chosen morsel: one bag-wide chunk size scaled to the peak
+        # estimated frontier (all of a bag's extension buffers share it)
+        ext_steps = [s for s in steps if isinstance(s, Extend)]
+        if ext_steps:
+            morsel = S.default_morsel(max(s.est_rows for s in ext_steps))
+            for s in ext_steps:
+                s.morsel = morsel
 
         # a terminal fold never expands the frontier (it folds the
         # expansion away; support can only shrink rows), so the bag's

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.semiring import MIN_PLUS, SUM_F32, Semiring
 from repro.core.trie import CSRGraph
+from repro.kernels.common import host_get
 
 
 # ------------------------------------------------------------------- spmv
@@ -282,7 +283,7 @@ def seminaive_device_fixpoint(sr: Semiring, apply_expr: ExprFn,
     state, rounds = _seminaive_device(
         sr, apply_expr, int(max_rounds), int(n),
         jnp.asarray(gather), jnp.asarray(scatter), ea, state0, frontier0)
-    state_h, rounds_h = jax.device_get((state, rounds))  # the one sync
+    state_h, rounds_h = host_get((state, rounds))  # the one sync
     state_h = np.asarray(state_h, dtype=np.float64)
     derived = state_h != float(np.asarray(sr.zero))
     keys = np.flatnonzero(derived).astype(np.int64)
@@ -352,7 +353,7 @@ def naive_device_fixpoint(sr: Semiring, apply_expr: ExprFn,
         sr, apply_expr, iters, tol, int(max_rounds), int(k),
         tuple(factor_kinds), jnp.asarray(out_idx), jnp.asarray(rec_idx),
         anns, jnp.asarray(ann0).astype(dt))
-    ann_h, rounds_h = jax.device_get((ann, rounds))
+    ann_h, rounds_h = host_get((ann, rounds))
     return np.asarray(ann_h, dtype=np.float64), int(rounds_h)
 
 

@@ -246,6 +246,77 @@ COST_UINT_PROBE = 0.5    # uint-kernel membership test, per element
 COST_SORT = 1.0          # sort-based group-by (np.unique), per element-log
 COST_REDUCE = 0.25       # segment reduce, per element
 COST_COUNT_ONLY = 0.05   # single-atom fold: (hi - lo), per frontier row
+COST_ALLOC = 0.002       # static frontier-buffer slot (zero/scatter traffic)
+
+# ------------------------------------------------- pipeline buffer sizing
+# The zero-sync extension pipeline (core.backend.DeviceBackend) fills a
+# STATIC-shaped frontier buffer per extension; its capacity is decided
+# here, once, from the statistics the plan IR already computed.
+CAP_HEADROOM = 2.0           # slack over est_rows before the cross clamp
+PIPELINE_MAX_BUFFER = 1 << 22  # rows; beyond this the pipeline disengages
+DEFAULT_MORSEL = 256
+MORSEL_CHUNK_SHIFT = 5       # fill loops run at most 2**5 = 32 chunks/buffer
+
+
+def default_morsel(est_peak_rows: float) -> int:
+    """Stats-chosen morsel (fill-chunk) size: scale with the estimated
+    peak frontier so tiny queries don't pay 4k-row chunks while large
+    frontiers amortize the per-chunk loop overhead.  Power of two in
+    [64, 2048]; ``REPRO_MORSEL_SIZE`` overrides at run time."""
+    if not math.isfinite(est_peak_rows) or est_peak_rows <= 0:
+        return DEFAULT_MORSEL
+    target = max(64.0, min(2048.0, est_peak_rows / 8.0))
+    return 1 << max(6, math.ceil(math.log2(target)))
+
+
+def frontier_capacity(est_cap: Optional[float], cross_bound: int,
+                      morsel: int,
+                      max_buffer: int = PIPELINE_MAX_BUFFER) -> int:
+    """Static buffer capacity for one pipelined extension.
+
+    ``est_cap`` is the plan IR's stats-informed allocation target (the
+    AGM-capped ``est_rows`` with :data:`CAP_HEADROOM` slack); it is
+    clamped to ``cross_bound`` — the TRUE cross-product bound of the
+    extension, computed exactly from the live tries — so a wildly
+    inflated estimate can never oversize the buffer beyond what the data
+    could produce, and to ``max_buffer``.  Degenerate estimates (missing,
+    NaN, infinite or negative — i.e. statistics were absent when the plan
+    was built) raise instead of silently sizing a wrong buffer: an
+    undersized buffer would be caught by the overflow flag, but a
+    garbage-sized one is a planner bug we want loud.
+
+    The result is rounded up to a power-of-two multiple of ``morsel``
+    (never below one morsel) so the jitted step retraces on a small set
+    of bucketed shapes.  All arithmetic is Python-int: a pathological
+    ``cross_bound`` (e.g. a dense trie squared) cannot overflow into a
+    negative numpy capacity.
+    """
+    if morsel <= 0:
+        raise ValueError(f"morsel size must be positive, got {morsel}")
+    if cross_bound < 0:
+        raise ValueError(f"negative cross-product bound {cross_bound}")
+    if est_cap is None or not math.isfinite(est_cap) or est_cap < 0:
+        raise ValueError(
+            "frontier-buffer sizing needs a finite statistics-informed "
+            f"estimate; got {est_cap!r} (statistics missing or degenerate "
+            "when the physical plan was built)")
+    cross = min(int(cross_bound), 1 << 62)
+    cap = min(int(est_cap) + morsel, cross, int(max_buffer))
+    cap = max(cap, min(morsel, cross, int(max_buffer)), 1)
+    # bucket: power-of-two multiple of morsel, so repeated queries over
+    # similar cardinalities reuse the compiled step
+    bucket = morsel
+    while bucket < cap:
+        bucket <<= 1
+    return bucket
+
+
+def buffer_cost(cap: float) -> float:
+    """Modelled cost of one extension's static frontier buffer: every
+    slot is zeroed/scattered whether or not a row lands in it, so the
+    plan search (``core.plan_search``) sees over-allocation — attribute
+    orders with tighter intermediate estimates win ties."""
+    return max(cap, 0.0) * COST_ALLOC
 
 
 def _log2(x: float) -> float:

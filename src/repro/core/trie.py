@@ -57,6 +57,20 @@ class TrieLevel:
                 on_upload()
         return cached[1]
 
+    def device_offsets(self, to_device, on_upload=None):
+        """Device-resident copy of ``offsets`` (same identity-keyed cache
+        discipline as :meth:`device_values`).  The zero-sync extension
+        pipeline derives per-row candidate bounds on device
+        (``lo = offsets[cursor]``), so segment offsets must be resident
+        alongside the values they index."""
+        cached = self.__dict__.get("_dev_offsets")
+        if cached is None or cached[0] is not self.offsets:
+            cached = (self.offsets, to_device(self.offsets))
+            self._dev_offsets = cached
+            if on_upload is not None:
+                on_upload()
+        return cached[1]
+
 
 @dataclasses.dataclass
 class Trie:
@@ -193,6 +207,21 @@ class Trie:
         view = (src, self.levels[1].values.astype(np.int64), self.annotation)
         self._edge_view = (token, view)
         return view
+
+    def device_annotation(self, to_device, on_upload=None):
+        """Device-resident copy of the annotation column (identity-keyed
+        like :meth:`TrieLevel.device_values`); ``None`` when the trie is
+        unannotated.  The extension pipeline multiplies exhausted atoms'
+        annotations into the device-resident frontier annotation."""
+        if self.annotation is None:
+            return None
+        cached = self.__dict__.get("_dev_annotation")
+        if cached is None or cached[0] is not self.annotation:
+            cached = (self.annotation, to_device(self.annotation))
+            self._dev_annotation = cached
+            if on_upload is not None:
+                on_upload()
+        return cached[1]
 
     def reorder(self, attrs: Sequence[str]) -> "Trie":
         """Re-index this trie under a different attribute order.

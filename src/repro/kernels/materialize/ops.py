@@ -5,9 +5,11 @@
 (``(pair_id, values, rank_a, rank_b)``, pair-major, values ascending),
 but the AND + rank arithmetic runs on device in ONE fused jitted call —
 block-row gather, uint32→bit expansion, Pallas AND + triangular-matmul
-ranks — followed by a single ``device_get``.  The host keeps only the
-ragged extraction (``np.nonzero`` of the returned bit plane); the
-popcount/cumsum passes that used to run per endpoint on host are gone.
+ranks — and the ragged extraction is a device count-then-fill
+(``_extract_pairs``): set bits scatter to a dense prefix sized by the
+exact ``p * block_bits`` bound, so the single closing ``host_get``
+carries already-compacted positions and ranks.  The host ``np.nonzero``
+pass (and its full-plane transfer) is gone.
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import interpret_default, round_up
+from repro.kernels.common import host_get, interpret_default, round_up
 from repro.kernels.materialize.kernel import bitset_materialize_kernel
 
 _BLOCK_ROWS = 256
@@ -91,15 +93,42 @@ def bitset_pair_materialize(bs, a_slots, b_slots, *, interpret=None):
         _device_words(bs), jnp.asarray(pos_a), jnp.asarray(pos_b),
         _tri(bs.block_bits), block_bits=bs.block_bits,
         interpret=bool(interpret))
-    # the ONE host round-trip of the extraction
-    band, ra, rb = jax.device_get((band, ra, rb))
-    blk_row, bitpos = np.nonzero(np.asarray(band))
+    # device count-then-fill extraction (the exact p*block_bits bound
+    # sizes the scatter, so it cannot overflow), then the ONE host
+    # round-trip of already-compacted positions and ranks
+    total, pos_c, ra_c, rb_c = _extract_pairs(band, ra, rb)
+    total, pos_h, ra_h, rb_h = host_get((total, pos_c, ra_c, rb_c))
+    n = int(total)
+    pos_h = np.asarray(pos_h)[:n].astype(np.int64)
+    blk_row = pos_h // bs.block_bits
+    bitpos = pos_h % bs.block_bits
     vals = (bs.block_ids[pos_a[blk_row]].astype(np.int64) * bs.block_bits
             + bitpos)
-    rank_a = bs.index[pos_a[blk_row]] + np.asarray(ra)[blk_row, bitpos]
-    rank_b = bs.index[pos_b[blk_row]] + np.asarray(rb)[blk_row, bitpos]
+    rank_a = bs.index[pos_a[blk_row]] + np.asarray(ra_h)[:n]
+    rank_b = bs.index[pos_b[blk_row]] + np.asarray(rb_h)[:n]
     return (pair_id[blk_row], vals.astype(np.int32),
             rank_a.astype(np.int64), rank_b.astype(np.int64))
+
+
+@jax.jit
+def _extract_pairs(band, ra, rb):
+    """Compact the AND-ed bit plane's set bits to a dense prefix on
+    device: flatten row-major (so (block-row, bit) order — hence pair-
+    major, values-ascending — survives), exclusive-scan the mask into
+    scatter targets, and gather each match's flat position and both
+    ranks.  Replaces the host ``np.nonzero`` ragged extraction."""
+    cap = band.size
+    flat = band.reshape(-1) > 0
+    widx = jnp.cumsum(flat.astype(jnp.int32)) - 1
+    total = widx[-1] + 1
+    scat = jnp.where(flat, widx, cap)
+    j = jnp.arange(cap, dtype=jnp.int32)
+
+    def compact(x):
+        return jnp.zeros((cap,), x.dtype).at[scat].set(x, mode="drop")
+
+    return (total, compact(j), compact(ra.reshape(-1)),
+            compact(rb.reshape(-1)))
 
 
 def _contract_inputs():

@@ -29,16 +29,14 @@ def test_tree_matches_committed_baseline_exactly():
 
 
 def test_baseline_enumerates_exactly_the_known_syncs():
-    """The ISSUE's acceptance list: <=1 sync per GJ extension (device
-    backend's fused probe), the materialize np.nonzero extraction, and
-    the fixpoint closing syncs — nothing else."""
+    """The zero-sync pipeline leaves exactly ONE audited transfer point
+    in the whole device path: ``kernels.common.host_get``, the single
+    choke point every closing sync (pipeline landing, fixpoint exit,
+    materialize extraction, legacy per-extension oracle) routes
+    through — nothing else."""
     baseline = sync_lint.load_baseline()
     assert baseline == {
-        "core/backend.py::DeviceBackend.extend::device_get": 1,
-        "core/recursion.py::naive_device_fixpoint::device_get": 1,
-        "core/recursion.py::seminaive_device_fixpoint::device_get": 1,
-        "kernels/materialize/ops.py::bitset_pair_materialize::device_get": 1,
-        "kernels/materialize/ops.py::bitset_pair_materialize::np_nonzero": 1,
+        "kernels/common.py::host_get::device_get": 1,
     }
 
 
