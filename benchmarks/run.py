@@ -21,6 +21,13 @@ for CI's bench-smoke lane. ``--only`` restricts the run to the matching
 table/figure module and skips the backend suite (unless the filter
 mentions "backend").
 
+Device rows additionally carry the whole-bag-fusion A/B
+(``bag_fusion.speedup_vs_unfused`` with exact parity, one launch per
+bag vs one per attribute step), the per-query jit-launch budget
+(``pipeline.launches == extend.closing_syncs`` — gated EXACTLY below),
+and the engine-lifetime compile-vs-steady dispatch-wall split
+(``pipeline_wall_split`` — timing, so outside the exact-gated dict).
+
 Bench-regression gate (CI): ``--check-baseline benchmarks/baseline.json``
 compares the suite against the committed baseline — wall times within a
 generous ``--tolerance`` (default 3x plus a fixed absolute slack: smoke
@@ -159,6 +166,12 @@ def run_backend_suite(smoke: bool) -> list:
                                                   0)),
                 "pipeline_on": bool(getattr(eng.backend,
                                             "pipeline_enabled", False)),
+                # whole-bag fusion launch budget: with fusion on, every
+                # executed join bag is ONE jit launch, so launches ==
+                # closing_syncs (gated EXACTLY below)
+                "launches": int(dispatch.get("pipeline.launches", 0)),
+                "fused_on": bool(getattr(eng.backend, "fuse_bags",
+                                         False)),
                 "dispatch": dispatch,
                 # cumulative static-verification counters (plans and
                 # search candidates validated, sanitize assertions run):
@@ -246,6 +259,32 @@ def run_backend_suite(smoke: bool) -> list:
                         digest, _result_digest(sync_res),
                         rtol=1e-5, atol=1e-6)),
                 }
+            # Whole-bag fusion A/B: time the per-attribute-step pipeline
+            # (fusion off, one launch per step) warmed against the
+            # one-launch-per-bag fused program on the same query — the
+            # perf half of the fusion acceptance, plus exact parity.
+            if (backend == "device"
+                    and row["pipeline_on"] and row["fused_on"]
+                    and dispatch.get("pipeline.launches", 0)):
+                ws, unf_res, unf_delta = _ab_walls(
+                    eng, q, reps,
+                    lambda m: setattr(eng.backend, "fuse_bags", m),
+                    capture_counters=True)
+                fus_w, unf_w = min(ws[True]), min(ws[False])
+                row["bag_fusion"] = {
+                    "wall_s_warm": fus_w,
+                    "unfused_wall_s": unf_w,
+                    "unfused_launches": int(
+                        unf_delta.get("pipeline.launches", 0)),
+                    "speedup_vs_unfused": unf_w / max(fus_w, 1e-9),
+                    "parity_vs_unfused": bool(np.isclose(
+                        digest, _result_digest(unf_res),
+                        rtol=1e-5, atol=1e-6)),
+                }
+            # Compile-vs-steady wall split (engine-lifetime, seconds):
+            # timing, so it lives OUTSIDE the exact-gated dispatch dict
+            if hasattr(eng.backend, "wall_split"):
+                row["pipeline_wall_split"] = dict(eng.backend.wall_split())
             out.append(row)
     return out
 
@@ -272,6 +311,9 @@ def _gate_summary(suite: list) -> dict:
         pipe = r.get("device_pipeline")
         if pipe is not None:
             entry["pipeline_parity"] = bool(pipe["parity_vs_sync_path"])
+        fus = r.get("bag_fusion")
+        if fus is not None:
+            entry["fusion_parity"] = bool(fus["parity_vs_unfused"])
         out[f"{r['query']}/{r['backend']}"] = entry
     return out
 
@@ -317,6 +359,9 @@ def check_baseline(suite: list, path: str, tolerance: float,
                             f"FAILED")
         if b.get("pipeline_parity") and not c.get("pipeline_parity", True):
             failures.append(f"{key}: pipeline vs pinned-sync-path parity "
+                            f"FAILED")
+        if b.get("fusion_parity") and not c.get("fusion_parity", True):
+            failures.append(f"{key}: fused-bag vs per-step-pipeline parity "
                             f"FAILED")
         limit = b["wall_s"] * tolerance + BASELINE_ABS_SLACK_S
         if c["wall_s"] > limit:
@@ -410,6 +455,12 @@ def main() -> None:
                       f"{pipe['speedup_vs_sync_path']:.2f}x vs sync path "
                       f"({pipe['sync_path_host_syncs']} syncs, "
                       f"parity={pipe['parity_vs_sync_path']})")
+        fus = row_.get("bag_fusion")
+        if fus:
+            extra += (f"  # fused bags: {row_['launches']} launches "
+                      f"(vs {fus['unfused_launches']} unfused), "
+                      f"{fus['speedup_vs_unfused']:.2f}x, "
+                      f"parity={fus['parity_vs_unfused']}")
         rec = row_.get("device_recursion")
         if rec:
             extra += (f"  # device recursion: {rec['rounds']} rounds, "
@@ -450,6 +501,22 @@ def main() -> None:
               "device pipeline on):")
         for r in leaky:
             print(f"#   {r['query']}: {r['host_syncs']}")
+        sys.exit(1)
+
+    # launch-budget gate, EXACT and baseline-independent: with whole-bag
+    # fusion on, every executed join bag is ONE jit launch, so
+    # pipeline.launches must equal extend.closing_syncs (one landing per
+    # join attempt — overflow retries count one launch per attempt)
+    over = [r for r in suite
+            if r["backend"] == "device" and r.get("pipeline_on")
+            and r.get("fused_on")
+            and r.get("launches", 0) != r.get("closing_syncs", 0)]
+    if over:
+        print("# LAUNCH-BUDGET VIOLATIONS (pipeline.launches != "
+              "extend.closing_syncs with whole-bag fusion on):")
+        for r in over:
+            print(f"#   {r['query']}: {r['launches']} launches, "
+                  f"{r['closing_syncs']} landings")
         sys.exit(1)
 
     if args.write_baseline:

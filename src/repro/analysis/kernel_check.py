@@ -188,10 +188,11 @@ def check_captured(name: str, rec: CapturedCall) -> None:
 def contracts() -> list:
     """The dispatch-participating kernel packages' CONTRACT records."""
     from repro.kernels.bitset_intersect import ops as bitset_ops
+    from repro.kernels.frontier_fill import ops as frontier_fill_ops
     from repro.kernels.materialize import ops as materialize_ops
     from repro.kernels.uint_intersect import ops as uint_ops
     return [uint_ops.CONTRACT, bitset_ops.CONTRACT,
-            materialize_ops.CONTRACT]
+            materialize_ops.CONTRACT, frontier_fill_ops.CONTRACT]
 
 
 def check_contract(contract: dict) -> int:

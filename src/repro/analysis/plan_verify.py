@@ -33,6 +33,10 @@ Checks, each with a stable violation ``code``:
     structural condition actually holds, and Algorithm-3 layout
     thresholds inside ``[block_bits, MAX_THRESHOLD_BITS]`` — the cohort
     tables :mod:`repro.core.layouts` dispatches on.
+  * ``sideways-invalid`` — sideways bitset filtering only annotated on
+    search-routed extensions with >= 2 constraining atoms where some
+    arity-2 atom actually probes its second trie level (the shape the
+    counting pass's block-directory intersection requires).
   * ``reuse-key`` — engine-lifetime bag-cache keys: hashable
     canonicalized structure, alias-resolved relation names, and
     ``reuse_rels`` covering every relation the bag's subtree reads (an
@@ -357,6 +361,25 @@ def _verify_extend_routing(step: Extend, scan, advancing_atoms,
                           f"extend {step.var!r} routed 'pair_store' but is "
                           f"not a binary self-join over one arity-2 index "
                           f"at depth 1"))
+    if step.sideways is None:
+        return
+    if step.sideways != "bitset":
+        add(PlanViolation("sideways-invalid", where,
+                          f"extend {step.var!r}: unknown sideways "
+                          f"{step.sideways!r} (legal: 'bitset')"))
+    elif step.routing != "search" or step.n_constraining < 2:
+        add(PlanViolation("sideways-invalid", where,
+                          f"extend {step.var!r}: sideways filtering needs "
+                          f">= 2 constraining atoms on the 'search' "
+                          f"routing (got routing={step.routing!r}, "
+                          f"n_constraining={step.n_constraining})"))
+    elif not any(atom_arity[i] == 2 and depth[i] == 1
+                 and not scan.accesses[i].selections
+                 for i in advancing_atoms):
+        add(PlanViolation("sideways-invalid", where,
+                          f"extend {step.var!r}: sideways 'bitset' but no "
+                          f"constraining arity-2 atom probes its second "
+                          f"trie level"))
 
 
 def _verify_fold_routing(step: TerminalFold, scan, advancing_atoms,

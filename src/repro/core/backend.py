@@ -37,6 +37,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import os
+import time
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -49,7 +50,9 @@ from repro.core import intersect as I
 from repro.core.layouts import engine_store_for
 from repro.core.semiring import Semiring
 from repro.kernels.bitset_intersect.ops import as_word_kernel
-from repro.kernels.common import host_get
+from repro.kernels.common import host_get, interpret_default
+from repro.kernels.frontier_fill import ops as ff_ops
+from repro.kernels.frontier_fill import ref as ff_ref
 from repro.kernels.materialize.ops import as_materialize_kernel
 from repro.kernels.uint_intersect.ops import intersect_count_csr_batched
 
@@ -226,6 +229,29 @@ class DeviceBackend(ExecBackend):
         # the differential oracle (Engine(device_pipeline=...) overrides).
         self.pipeline_enabled = (_env_on("REPRO_DEVICE_PIPELINE", True)
                                  if pipeline is None else bool(pipeline))
+        # Whole-bag fusion: record each bag's pipelined extension chain
+        # and trace it as ONE jitted composite (``run_bag``), so XLA
+        # fuses step k's compaction with step k+1's counting pass and a
+        # bag costs a single launch.  REPRO_FUSED_BAG=off falls back to
+        # one launch per attribute step (Engine(fused_bags=...)
+        # overrides).
+        self.fuse_bags = _env_on("REPRO_FUSED_BAG", True)
+        # Fill-stage kernel: "pallas" runs the frontier-fill kernel
+        # package per morsel chunk; REPRO_FRONTIER_FILL=jnp (or any
+        # falsey value) pins the plain-jnp reference path as the
+        # differential oracle.
+        fm = os.environ.get("REPRO_FRONTIER_FILL", "pallas")
+        fm = fm.strip().lower()
+        self.fill_mode = "jnp" if (fm in _FALSEY or fm == "jnp") \
+            else "pallas"
+        self._fill_interpret = (bool(interpret) if interpret is not None
+                                else interpret_default())
+        # compile-vs-steady wall split: trace keys seen once are charged
+        # to compile wall, repeats to steady wall (informational only —
+        # kept OUT of ``stats`` so the exact dispatch gates stay exact).
+        self._traced: set = set()
+        self.wall_compile_s = 0.0
+        self.wall_steady_s = 0.0
         # engine-lifetime pipeline-cap feedback: bag shape -> the
         # counting pass's measured per-variable totals from an
         # overflow-retried execution, so repeated queries size their
@@ -249,6 +275,58 @@ class DeviceBackend(ExecBackend):
 
     def _up_idx(self, arr) -> jnp.ndarray:
         return jnp.asarray(np.asarray(arr, dtype=_IDX_NP))
+
+    def _dev_sideways(self, bs):
+        """Device copies of a blocked bitset's DIRECTORY (slot router,
+        block CSR, block ids) for the counting pass's sideways block
+        intersection — the words themselves stay host-side.  Cached on
+        the bitset instance, invalidated if the bitset was rebuilt."""
+        cached = getattr(bs, "_dev_sideways_cache", None)
+        if cached is not None and cached[0] is bs.block_ids:
+            return cached[1]
+        dev = (jnp.asarray(np.asarray(bs.slot_of, np.int32)),
+               self._up_idx(bs.offsets),
+               jnp.asarray(np.asarray(bs.block_ids, np.int32)))
+        bs._dev_sideways_cache = (bs.block_ids, dev)
+        self.stats["upload.bitset_dirs"] += 1
+        return dev
+
+    def _timed(self, key, fn, *args, **kw):
+        """Dispatch ``fn`` and charge its wall time to the compile or
+        steady bucket by whether this trace ``key`` was seen before.
+        Measures dispatch/trace wall only (no blocking sync — that
+        would be a transfer, and the whole point is not to have one)."""
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        dt = time.perf_counter() - t0
+        if key in self._traced:
+            self.wall_steady_s += dt
+        else:
+            self._traced.add(key)
+            self.wall_compile_s += dt
+        return out
+
+    def wall_split(self) -> Dict[str, float]:
+        return {"pipeline.wall_compile_s": round(self.wall_compile_s, 6),
+                "pipeline.wall_steady_s": round(self.wall_steady_s, 6)}
+
+    def _sideways_dev(self, cons):
+        """Per-probe device sideways tuples + static block_bits for an
+        extension's constraining atoms (seed excluded)."""
+        sw_t, bits_t = [], []
+        for c in cons[1:]:
+            sw = c[3]
+            if sw is None:
+                sw_t.append(None)
+                bits_t.append(None)
+            else:
+                l0, bs = sw
+                l0v = l0.device_values(jnp.asarray,
+                                       on_upload=self._count_upload)
+                slot_d, boffs_d, bids_d = self._dev_sideways(bs)
+                sw_t.append((l0v, slot_d, boffs_d, bids_d))
+                bits_t.append(int(bs.block_bits))
+        return tuple(sw_t), tuple(bits_t)
 
     # ------------------------------------------------------------- extend
     def extend(self, infos, F: int):
@@ -313,15 +391,21 @@ class DeviceBackend(ExecBackend):
                         cons: Sequence[Tuple], cap_out: int,
                         morsel: int) -> "DeviceFrontier":
         """One pipelined attribute extension.  ``cons`` lists
-        ``(cursor_key, trie_level, depth0)`` per constraining atom, the
-        estimated-min-property seed first.  Returns the successor state;
-        nothing touches the host."""
+        ``(cursor_key, trie_level, depth0, sideways)`` per constraining
+        atom, the estimated-min-property seed first; ``sideways`` is
+        ``(level0, blocked_bitset)`` when the counting pass should also
+        intersect that probe atom's bitset blocks (dense cohorts —
+        prunes before expansion, not just clips), else None.  Returns
+        the successor state; nothing touches the host."""
         self.stats["extend.calls"] += 1
         self.stats["extend.pipeline_extends"] += 1
+        self.stats["pipeline.launches"] += 1
         if len(cons) > 1:
             self.stats["pipeline.sip_extends"] += 1
+        if any(c[3] is not None for c in cons[1:]):
+            self.stats["pipeline.sideways_extends"] += 1
 
-        def triple(key, lv, d0):
+        def triple(key, lv, d0, _sw):
             vals = lv.device_values(jnp.asarray,
                                     on_upload=self._count_upload)
             if d0:
@@ -333,6 +417,7 @@ class DeviceBackend(ExecBackend):
         seed = triple(*cons[0])
         probes = tuple(triple(*c) for c in cons[1:])
         probe_d0 = tuple(bool(c[2]) for c in cons[1:])
+        sideways, sideways_bits = self._sideways_dev(cons)
         cons_keys = {c[0] for c in cons}
         col_keys = list(state.cols)
         cur_keys = [k for k in state.cursors if k not in cons_keys]
@@ -341,10 +426,15 @@ class DeviceBackend(ExecBackend):
                  + ((state.ann,) if state.ann is not None else ()))
 
         (count, overflow, chunks, total, vals_c, p0_c, pos_c,
-         carry_c) = _pipeline_step(
-            state.count, state.overflow, seed, probes, carry,
+         carry_c) = self._timed(
+            ("step", state.cap, int(cap_out), int(morsel), probe_d0,
+             sideways_bits, len(carry)),
+            _pipeline_step,
+            state.count, state.overflow, seed, probes, sideways, carry,
             cap_in=state.cap, cap_out=int(cap_out), morsel=int(morsel),
-            seed_d0=bool(cons[0][2]), probe_d0=probe_d0)
+            seed_d0=bool(cons[0][2]), probe_d0=probe_d0,
+            sideways_bits=sideways_bits, fill_mode=self.fill_mode,
+            fill_interpret=self._fill_interpret)
 
         it = iter(carry_c)
         cols = {k: next(it) for k in col_keys}
@@ -352,7 +442,7 @@ class DeviceBackend(ExecBackend):
         ann = next(it) if state.ann is not None else None
         cols[var] = vals_c
         cursors[cons[0][0]] = p0_c
-        for (k, _lv, _d0), p in zip(cons[1:], pos_c):
+        for (k, _lv, _d0, _sw), p in zip(cons[1:], pos_c):
             cursors[k] = p
         return DeviceFrontier(
             cap=int(cap_out), count=count, overflow=overflow,
@@ -377,6 +467,7 @@ class DeviceBackend(ExecBackend):
         """
         self.stats["fold.calls"] += 1
         self.stats["pipeline.device_folds"] += 1
+        self.stats["pipeline.launches"] += 1
 
         def triple(key, lv, d0, _ann):
             vals = lv.device_values(jnp.asarray,
@@ -402,7 +493,10 @@ class DeviceBackend(ExecBackend):
         carry = (tuple(state.cols[k] for k in col_keys)
                  + tuple(state.cursors[k] for k in cur_keys))
 
-        count, chunks, ann_c, carry_c = _pipeline_fold(
+        count, chunks, ann_c, carry_c = self._timed(
+            ("fold", state.cap, int(morsel), probe_d0, sr.name,
+             len(carry)),
+            _pipeline_fold,
             state.count, seed, probes, state.ann, leaf_anns, carry,
             cap_in=state.cap, morsel=int(morsel),
             seed_d0=bool(cons[0][2]), probe_d0=probe_d0, sr=sr)
@@ -427,6 +521,123 @@ class DeviceBackend(ExecBackend):
         n = ann_dev.shape[0]
         leaf = ann_dev[jnp.clip(cur, 0, max(n - 1, 0))]
         state.ann = sr.mul(state.ann, leaf.astype(state.ann.dtype))
+
+    def run_bag(self, cursors0: Dict[int, np.ndarray],
+                ann0: Optional[np.ndarray],
+                steps: Sequence[Tuple]) -> "DeviceFrontier":
+        """Execute ONE bag's whole recorded extension chain as a single
+        jitted composite — the fused counterpart of calling
+        ``pipeline_begin`` + per-attribute ``pipeline_extend`` /
+        ``pipeline_terminal_fold`` / ``pipeline_ann_mul``.
+
+        ``steps`` is the host-recorded plan (one tuple per attribute:
+        ``("extend", var, cons, cap_out, morsel)``,
+        ``("fold", var, cons, sr, morsel)`` or
+        ``("annmul", cursor_key, trie, sr)`` with the same ``cons``
+        descriptors the per-step methods take).  The chain is lowered to
+        a pure hashable program over a flat deduplicated operand list,
+        so ``_bag_program`` retraces only when the bag SHAPE changes —
+        and XLA sees step k's compaction and step k+1's counting pass in
+        one module, fusing across the attribute boundary.  One launch
+        per bag; the closing ``pipeline_land`` stays the only transfer.
+        """
+        self.stats["pipeline.launches"] += 1
+        canon: Dict[int, int] = {}
+
+        def ckey(k):
+            if k not in canon:
+                canon[k] = len(canon)
+            return canon[k]
+
+        for k in cursors0:
+            ckey(k)
+        arrays: List = []
+        seen: Dict[int, int] = {}
+
+        def aref(x):
+            if x is None:
+                return -1
+            i = seen.get(id(x))
+            if i is None:
+                i = len(arrays)
+                arrays.append(x)
+                seen[id(x)] = i
+            return i
+
+        def upload(lv, d0):
+            vals_i = aref(lv.device_values(jnp.asarray,
+                                           on_upload=self._count_upload))
+            offs_i = -1 if d0 else aref(lv.device_offsets(
+                self._up_idx, on_upload=self._count_upload))
+            return vals_i, offs_i
+
+        prog = []
+        cap = 1
+        for step in steps:
+            kind = step[0]
+            if kind == "extend":
+                _, var, cons, cap_out, morsel = step
+                self.stats["extend.calls"] += 1
+                self.stats["extend.pipeline_extends"] += 1
+                if len(cons) > 1:
+                    self.stats["pipeline.sip_extends"] += 1
+                if any(c[3] is not None for c in cons[1:]):
+                    self.stats["pipeline.sideways_extends"] += 1
+                cdescs = []
+                for i, (key, lv, d0, sw) in enumerate(cons):
+                    vals_i, offs_i = upload(lv, d0)
+                    swt = None
+                    if sw is not None and i > 0:
+                        l0, bs = sw
+                        l0v = l0.device_values(
+                            jnp.asarray, on_upload=self._count_upload)
+                        slot_d, boffs_d, bids_d = self._dev_sideways(bs)
+                        swt = (aref(l0v), aref(slot_d), aref(boffs_d),
+                               aref(bids_d), int(bs.block_bits))
+                    cdescs.append((ckey(key), vals_i, offs_i, swt))
+                prog.append(("extend", var, int(cap_out), int(morsel),
+                             tuple(cdescs)))
+                cap = int(cap_out)
+            elif kind == "fold":
+                _, var, cons, sr, morsel = step
+                self.stats["fold.calls"] += 1
+                self.stats["pipeline.device_folds"] += 1
+                cdescs = []
+                for key, lv, d0, ann_trie in cons:
+                    vals_i, offs_i = upload(lv, d0)
+                    ann_i = -1
+                    if ann_trie is not None:
+                        ann_i = aref(ann_trie.device_annotation(
+                            jnp.asarray, on_upload=self._count_upload))
+                    cdescs.append((ckey(key), vals_i, offs_i, ann_i))
+                prog.append(("fold", var, int(morsel), sr,
+                             tuple(cdescs)))
+            elif kind == "annmul":
+                _, key, trie, sr = step
+                ann_i = aref(trie.device_annotation(
+                    jnp.asarray, on_upload=self._count_upload))
+                prog.append(("annmul", ckey(key), ann_i, sr))
+            else:
+                raise ValueError(f"unknown bag step {kind!r}")
+        prog_t = tuple(prog)
+        cur_canon = {canon[k]: self._up_idx(c)
+                     for k, c in cursors0.items()}
+        ann = jnp.asarray(ann0) if ann0 is not None else None
+        (count, overflow, morsels, lcounts, needs, cols, cursors,
+         ann_o) = self._timed(
+            ("bag", prog_t, self.fill_mode),
+            _bag_program, tuple(arrays), cur_canon, ann,
+            prog=prog_t, fill_mode=self.fill_mode,
+            fill_interpret=self._fill_interpret)
+        id_of = {v: k for k, v in canon.items()}
+        lvars = [s[1] for s in prog_t if s[0] in ("extend", "fold")]
+        evars = [s[1] for s in prog_t if s[0] == "extend"]
+        return DeviceFrontier(
+            cap=cap, count=count, overflow=overflow, morsels=morsels,
+            cols=dict(cols),
+            cursors={id_of[c]: cur for c, cur in cursors.items()},
+            ann=ann_o, level_counts=list(zip(lvars, lcounts)),
+            needed=list(zip(evars, needs)))
 
     def pipeline_land(self, state: "DeviceFrontier"):
         """THE closing sync: fetch the compacted frontier (columns,
@@ -501,20 +712,42 @@ def _bounds(values, offsets, cursor, cap_in, valid):
 
 
 @partial(jax.jit, static_argnames=("cap_in", "cap_out", "morsel",
-                                   "seed_d0", "probe_d0"))
-def _pipeline_step(count, overflow, seed, probes, carry, *,
+                                   "seed_d0", "probe_d0",
+                                   "sideways_bits", "fill_mode",
+                                   "fill_interpret"))
+def _pipeline_step(count, overflow, seed, probes, sideways, carry, *,
                    cap_in: int, cap_out: int, morsel: int,
-                   seed_d0: bool, probe_d0: Tuple[bool, ...]):
+                   seed_d0: bool, probe_d0: Tuple[bool, ...],
+                   sideways_bits: Tuple = (), fill_mode: str = "jnp",
+                   fill_interpret: bool = True):
+    """Per-step (unfused) jitted wrapper around ``_extend_body`` — one
+    launch per attribute extension.  Whole-bag fusion calls the body
+    directly from ``_bag_program`` instead."""
+    return _extend_body(count, overflow, seed, probes, sideways, carry,
+                        cap_in=cap_in, cap_out=cap_out, morsel=morsel,
+                        sideways_bits=sideways_bits, fill_mode=fill_mode,
+                        fill_interpret=fill_interpret)
+
+
+def _extend_body(count, overflow, seed, probes, sideways, carry, *,
+                 cap_in: int, cap_out: int, morsel: int,
+                 sideways_bits: Tuple, fill_mode: str,
+                 fill_interpret: bool):
     """One zero-sync attribute extension: count-then-fill in one program.
 
     1. counting probe: per-row seed-segment sizes, narrowed by sideways
-       min/max information from every later (probe) atom;
+       min/max information from every later (probe) atom — and, for
+       probe atoms with a ``sideways`` bitset directory, by intersecting
+       the probe row's POPULATED bitset blocks with the envelope (dense
+       cohorts prune before expansion, not just clip);
     2. exclusive scan -> per-row output offsets + total (the overflow
        check against the static capacity);
     3. fill: ``morsel``-sized chunks invert the offsets (searchsorted)
        to seed positions, gather values and probe every other atom with
-       the branch-free lockstep search — oversized frontiers just spill
-       to the next chunk of the same loop instead of a host round-trip;
+       the branch-free lockstep search — one ``frontier_fill`` Pallas
+       launch per chunk (``fill_mode="jnp"`` pins the bit-identical
+       plain-jnp reference), and oversized frontiers just spill to the
+       next chunk of the same loop instead of a host round-trip;
     4. compaction: scatter surviving rows to a dense prefix and gather
        the previous frontier's columns/cursors/annotation through them.
 
@@ -534,7 +767,8 @@ def _pipeline_step(count, overflow, seed, probes, carry, *,
     bounds = []
     alive = valid
     gmin = gmax = None
-    for (vals_k, offs_k, cur_k), d0 in zip(probes, probe_d0):
+    cur_ks = []
+    for vals_k, offs_k, cur_k in probes:
         nk = vals_k.shape[0]
         lo_k, hi_k = _bounds(vals_k, offs_k, cur_k, cap_in, valid)
         alive = alive & (lo_k < hi_k)
@@ -543,6 +777,44 @@ def _pipeline_step(count, overflow, seed, probes, carry, *,
         gmin = mn if gmin is None else jnp.maximum(gmin, mn)
         gmax = mx if gmax is None else jnp.minimum(gmax, mx)
         bounds.append((vals_k, lo_k, hi_k))
+        cur_ks.append(cur_k)
+
+    # ---- bitset sideways pass: a dense-cohort probe atom's candidate
+    # set is exactly the union of its POPULATED bitset blocks, so the
+    # envelope can only contain matches inside blocks the directory
+    # lists.  Search the row's block-id segment for the envelope's
+    # block range: rows with no populated block in range die here
+    # (their expansion would fail that probe for every candidate), and
+    # the envelope snaps inward to the first/last populated block.
+    # Rows routed to the sparse cohort (slot_of < 0) pass through
+    # untouched — pure narrowing, results unchanged.
+    for sw, bbits, cur_k in zip(sideways, sideways_bits, cur_ks):
+        if sw is None or cur_k is None:
+            continue
+        l0v, slot_of, boffs, bids = sw
+        nl0 = l0v.shape[0]
+        nid = slot_of.shape[0]
+        ns = boffs.shape[0] - 1
+        nb = bids.shape[0]
+        ids = l0v[jnp.clip(cur_k, 0, max(nl0 - 1, 0))]
+        slot = slot_of[jnp.clip(ids, 0, max(nid - 1, 0))]
+        in_bs = alive & (ids >= 0) & (ids < nid) & (slot >= 0)
+        s = jnp.clip(slot, 0, max(ns - 1, 0)).astype(_IDX)
+        blo = jnp.where(in_bs, boffs[s], 0)
+        bhi = jnp.where(in_bs, boffs[s + 1], 0)
+        qlo = (gmin // bbits).astype(bids.dtype)
+        qhi = (gmax // bbits).astype(bids.dtype)
+        p_lo, _ = I.segment_searchsorted(bids, blo, bhi, qlo)
+        p_hi, f_hi = I.segment_searchsorted(bids, blo, bhi, qhi)
+        last = p_hi + f_hi - 1
+        has = in_bs & (p_lo <= last)
+        alive = alive & (~in_bs | has)
+        fb = bids[jnp.clip(p_lo, 0, max(nb - 1, 0))]
+        lb = bids[jnp.clip(last, 0, max(nb - 1, 0))]
+        gmin = jnp.where(has, jnp.maximum(gmin, fb * bbits), gmin)
+        gmax = jnp.where(has, jnp.minimum(gmax, (lb + 1) * bbits - 1),
+                         gmax)
+
     if probes:
         p_lo, _ = I.segment_searchsorted(seed_values, lo0, hi0, gmin)
         p_hi, f_hi = I.segment_searchsorted(seed_values, lo0, hi0, gmax)
@@ -570,19 +842,17 @@ def _pipeline_step(count, overflow, seed, probes, carry, *,
 
     def body(st):
         c, vals_b, row_b, p0_b, pos_bs, keep_b = st
-        j = c * morsel + jnp.arange(morsel, dtype=_IDX)
-        row = jnp.clip(jnp.searchsorted(offs, j, side="right") - 1,
-                       0, cap_in - 1).astype(_IDX)
-        p0 = lo0[row] + (j - offs[row])
-        live = j < total_c
-        vals = seed_values[jnp.clip(p0, 0, max(n0 - 1, 0))]
-        keep = live
-        poss = []
-        for vals_k, lo_k, hi_k in bounds:
-            pk, fk = I.segment_searchsorted(vals_k, lo_k[row], hi_k[row],
-                                            vals)
-            poss.append(pk.astype(_IDX))
-            keep = keep & fk
+        if fill_mode == "pallas":
+            vals, row, p0, keep, poss = ff_ops.fill_chunk(
+                c, total_c, offs, lo0, seed_values, tuple(bounds),
+                morsel=morsel, interpret=fill_interpret)
+        else:
+            vals, row, p0, keep, poss = ff_ref.fill_chunk_ref(
+                c, total_c, offs, lo0, seed_values, tuple(bounds),
+                morsel=morsel)
+        row = row.astype(_IDX)
+        p0 = p0.astype(_IDX)
+        poss = tuple(p.astype(_IDX) for p in poss)
         at = (c * morsel,)
         vals_b = lax.dynamic_update_slice(vals_b, vals, at)
         row_b = lax.dynamic_update_slice(row_b, row, at)
@@ -619,7 +889,15 @@ def _pipeline_step(count, overflow, seed, probes, carry, *,
 def _pipeline_fold(count, seed, probes, ann, leaf_anns, carry, *,
                    cap_in: int, morsel: int, seed_d0: bool,
                    probe_d0: Tuple[bool, ...], sr: Semiring):
-    """Terminal-fold companion of ``_pipeline_step``: identical counting
+    """Per-step (unfused) jitted wrapper around ``_fold_body`` — see
+    ``_pipeline_step``."""
+    return _fold_body(count, seed, probes, ann, leaf_anns, carry,
+                      cap_in=cap_in, morsel=morsel, sr=sr)
+
+
+def _fold_body(count, seed, probes, ann, leaf_anns, carry, *,
+               cap_in: int, morsel: int, sr: Semiring):
+    """Terminal-fold companion of ``_extend_body``: identical counting
     pass and morsel-chunked expand-and-probe, but each surviving
     candidate's semiring contribution is segment-reduced straight onto
     its source row — nothing is materialized, so no output capacity and
@@ -635,7 +913,7 @@ def _pipeline_fold(count, seed, probes, ann, leaf_anns, carry, *,
     bounds = []
     alive = valid
     gmin = gmax = None
-    for (vals_k, offs_k, cur_k), d0 in zip(probes, probe_d0):
+    for vals_k, offs_k, cur_k in probes:
         nk = vals_k.shape[0]
         lo_k, hi_k = _bounds(vals_k, offs_k, cur_k, cap_in, valid)
         alive = alive & (lo_k < hi_k)
@@ -719,6 +997,113 @@ def _pipeline_fold(count, seed, probes, ann, leaf_anns, carry, *,
     ann_c = compact(ann_new)
     carry_c = tuple(compact(g) for g in carry)
     return new_count, chunks, ann_c, carry_c
+
+
+@partial(jax.jit, static_argnames=("prog", "fill_mode",
+                                   "fill_interpret"))
+def _bag_program(arrays, cursors0, ann, *, prog: Tuple,
+                 fill_mode: str, fill_interpret: bool):
+    """ONE bag's whole extension chain as a single traced program.
+
+    ``prog`` is the pure hashable lowering built by ``run_bag``: per
+    step the constraining atoms reference operands by index into the
+    flat deduplicated ``arrays`` tuple and cursors by canonical ordinal,
+    so the trace key is exactly the bag SHAPE (chain of capacities,
+    morsels, atom structure, sideways directories, semirings) — two
+    executions of the same query shape hit the cache regardless of
+    which relation instances flow through.  The Python loop below runs
+    at trace time; at run time the whole chain is one XLA module, one
+    launch, zero transfers.
+    """
+    count = jnp.asarray(1, _IDX)
+    overflow = jnp.asarray(False)
+    morsels = jnp.asarray(0, _IDX)
+    cap = 1
+    cols: Dict[str, jnp.ndarray] = {}
+    cursors = dict(cursors0)
+    lcounts = []
+    needs = []
+    for step in prog:
+        kind = step[0]
+        if kind == "extend":
+            _, var, cap_out, morsel, cons = step
+
+            def trip(c):
+                key, vi, oi = c[0], c[1], c[2]
+                if oi < 0:
+                    return (arrays[vi], None, None)
+                return (arrays[vi], arrays[oi], cursors[key])
+
+            seed = trip(cons[0])
+            probes = tuple(trip(c) for c in cons[1:])
+            sideways = tuple(
+                None if c[3] is None else
+                (arrays[c[3][0]], arrays[c[3][1]], arrays[c[3][2]],
+                 arrays[c[3][3]])
+                for c in cons[1:])
+            # c[3][4] is already a Python int (run_bag lowered it), so
+            # no coercion happens inside this traced program
+            sideways_bits = tuple(
+                None if c[3] is None else c[3][4]
+                for c in cons[1:])
+            cons_keys = {c[0] for c in cons}
+            col_keys = list(cols)
+            cur_keys = [k for k in cursors if k not in cons_keys]
+            carry = (tuple(cols[k] for k in col_keys)
+                     + tuple(cursors[k] for k in cur_keys)
+                     + ((ann,) if ann is not None else ()))
+            (count, overflow, chunks, total, vals_c, p0_c, pos_c,
+             carry_c) = _extend_body(
+                count, overflow, seed, probes, sideways, carry,
+                cap_in=cap, cap_out=cap_out, morsel=morsel,
+                sideways_bits=sideways_bits, fill_mode=fill_mode,
+                fill_interpret=fill_interpret)
+            it = iter(carry_c)
+            cols = {k: next(it) for k in col_keys}
+            cursors = {k: next(it) for k in cur_keys}
+            if ann is not None:
+                ann = next(it)
+            cols[var] = vals_c
+            cursors[cons[0][0]] = p0_c
+            for c, p in zip(cons[1:], pos_c):
+                cursors[c[0]] = p
+            cap = cap_out
+            morsels = morsels + chunks
+            lcounts.append(count)
+            needs.append(total)
+        elif kind == "fold":
+            _, var, morsel, sr, cons = step
+
+            def tripf(c):
+                key, vi, oi = c[0], c[1], c[2]
+                if oi < 0:
+                    return (arrays[vi], None, None)
+                return (arrays[vi], arrays[oi], cursors[key])
+
+            seed = tripf(cons[0])
+            probes = tuple(tripf(c) for c in cons[1:])
+            leaf_anns = tuple(None if c[3] < 0 else arrays[c[3]]
+                              for c in cons)
+            col_keys = list(cols)
+            cur_keys = list(cursors)
+            carry = (tuple(cols[k] for k in col_keys)
+                     + tuple(cursors[k] for k in cur_keys))
+            count, chunks, ann, carry_c = _fold_body(
+                count, seed, probes, ann, leaf_anns, carry,
+                cap_in=cap, morsel=morsel, sr=sr)
+            it = iter(carry_c)
+            cols = {k: next(it) for k in col_keys}
+            cursors = {k: next(it) for k in cur_keys}
+            morsels = morsels + chunks
+            lcounts.append(count)
+        else:  # annmul
+            _, key, ai, sr = step
+            la = arrays[ai]
+            n = la.shape[0]
+            leaf = la[jnp.clip(cursors[key], 0, max(n - 1, 0))]
+            ann = sr.mul(ann, leaf.astype(ann.dtype))
+    return (count, overflow, morsels, tuple(lcounts), tuple(needs),
+            cols, cursors, ann)
 
 
 @jax.jit

@@ -130,6 +130,7 @@ class Engine:
                  backend=None, plan_search: Optional[bool] = None,
                  device_recursion: Optional[bool] = None,
                  device_pipeline: Optional[bool] = None,
+                 fused_bags: Optional[bool] = None,
                  verify_plans: Optional[bool] = None,
                  sanitize: Optional[bool] = None):
         self.catalog = Catalog()
@@ -146,6 +147,13 @@ class Engine:
             self.backend.pipeline_enabled = bool(device_pipeline)
         self.device_pipeline = bool(getattr(self.backend,
                                             "pipeline_enabled", False))
+        # whole-bag fusion (one traced composite per bag, backend.run_bag):
+        # None keeps the backend's REPRO_FUSED_BAG resolution; an explicit
+        # bool overrides it (fused_bags=False pins one launch per
+        # attribute step as the A/B leg)
+        if fused_bags is not None and hasattr(self.backend, "fuse_bags"):
+            self.backend.fuse_bags = bool(fused_bags)
+        self.fused_bags = bool(getattr(self.backend, "fuse_bags", False))
         # cost-based GHD + attribute-order search (core.plan_search); None
         # defers to REPRO_PLAN_SEARCH (default on, "off" = the seed
         # appearance-order plan, kept as the differential-testing oracle)

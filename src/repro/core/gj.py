@@ -112,6 +112,19 @@ class _PipelineDriver:
         self.backend = gj.backend
         self.depth = {id(a): a.depth for a in gj.atoms}
         self.state = None
+        # whole-bag fusion: eligible steps are RECORDED here and executed
+        # as one traced composite (backend.run_bag) at finish() — atom
+        # state is shadowed, so nothing observable happens until then.
+        # REPRO_FUSED_BAG=off (or a backend without run_bag) falls back
+        # to one jitted launch per attribute step.
+        self.fused = bool(getattr(self.backend, "fuse_bags", False)
+                          and hasattr(self.backend, "run_bag"))
+        self.plans: List[Tuple] = []
+        # bitset sideways filtering in the counting pass (plan-IR gated
+        # per variable via BagHints.extend_sideways); the env knob pins
+        # the envelope-only counting pass as the differential oracle
+        self.sideways_on = backend_mod._env_on("REPRO_SIDEWAYS_BITSET",
+                                               True)
         # overflow-retry mode: ignore the stats-informed targets and size
         # each buffer from the aborted attempt's counting-pass totals
         # (``needed``), or at the exact cross-product bound when no
@@ -137,19 +150,42 @@ class _PipelineDriver:
             self.morsel = stats_mod.DEFAULT_MORSEL
 
     def _effective_morsel(self, cap: int) -> int:
-        if self.morsel_pinned:
-            return self.morsel
         # doubled from the base morsel (so jit specializations bucket)
         # until the chunk loop is at most 2^MORSEL_CHUNK_SHIFT long
-        target = cap >> stats_mod.MORSEL_CHUNK_SHIFT
         m = self.morsel
-        while m < target:
-            m <<= 1
-        return m
+        if not self.morsel_pinned:
+            target = cap >> stats_mod.MORSEL_CHUNK_SHIFT
+            while m < target:
+                m <<= 1
+        # never exceed the buffer: capacities bucket to powers of two
+        # with a small floor (PIPELINE_MIN_BUCKET), so a morsel larger
+        # than cap would make the fill loop's chunk count round to ZERO
+        # and silently drop rows.  The pow2 floor keeps cap % morsel == 0.
+        m = min(m, cap)
+        return 1 << (max(m, 1).bit_length() - 1)
 
     def _next_var(self, a: BoundAtom) -> Optional[str]:
         d = self.depth[id(a)]
         return a.vars[d] if d < len(a.vars) else None
+
+    def _sideways(self, v: str, a: BoundAtom, d: int):
+        """Bitset sideways spec ``(level0, blocked_bitset)`` for a probe
+        atom of variable ``v``, or None.  Gated by the plan IR
+        (``BagHints.extend_sideways`` — the statistics density gate
+        decided dense cohorts dominate), and only where the runtime
+        shape matches: a binary atom probing its SECOND level, whose
+        layout store actually built a bitset cohort."""
+        h = self.gj.hints
+        if (not self.sideways_on or h is None
+                or d != 1 or a.trie.arity != 2
+                or (getattr(h, "extend_sideways", None) or {})
+                .get(v) != "bitset"):
+            return None
+        store = self.backend._pair_store(a.trie,
+                                         threshold=h.layout_threshold)
+        if store is None or store.bitset is None:
+            return None
+        return (a.trie.levels[0], store.bitset)
 
     def try_step(self, v: str, terminal: bool) -> bool:
         """Run one attribute extension (or terminal fold) on device if
@@ -208,21 +244,28 @@ class _PipelineDriver:
         cap_out = stats_mod.frontier_capacity(est, cross, self.morsel)
         # ---- engage: estimated min-property seed first
         infos.sort(key=lambda t: t[2])
-        if self.state is None:
-            self._begin()
-        cons_desc = [(id(a), a.trie.levels[d], d == 0)
-                     for a, d, _m in infos]
-        self.state = self.backend.pipeline_extend(
-            self.state, v, cons_desc, cap_out,
-            self._effective_morsel(cap_out))
+        cons_desc = [(id(a), a.trie.levels[d], d == 0,
+                      None if i == 0 else self._sideways(v, a, d))
+                     for i, (a, d, _m) in enumerate(infos)]
+        morsel = self._effective_morsel(cap_out)
+        if self.fused:
+            self.plans.append(("extend", v, cons_desc, cap_out, morsel))
+        else:
+            if self.state is None:
+                self._begin()
+            self.state = self.backend.pipeline_extend(
+                self.state, v, cons_desc, cap_out, morsel)
         self.bound = min(cross, cap_out)
         sr = gj.semiring
         for a, d, _m in infos:
             self.depth[id(a)] = d + 1
             if (sr is not None and d + 1 == len(a.trie.attrs)
                     and a.trie.annotation is not None):
-                self.backend.pipeline_ann_mul(self.state, sr, a.trie,
-                                              id(a))
+                if self.fused:
+                    self.plans.append(("annmul", id(a), a.trie, sr))
+                else:
+                    self.backend.pipeline_ann_mul(self.state, sr,
+                                                  a.trie, id(a))
         return True
 
     def _terminal_step(self, v: str, cons: List[BoundAtom]) -> bool:
@@ -270,8 +313,6 @@ class _PipelineDriver:
         if cross > backend_mod._COUNT_LIMIT:
             return False            # int32 counting pass could wrap
         infos.sort(key=lambda t: t[2])
-        if self.state is None:
-            self._begin()
         cons_desc = [
             (id(a), a.trie.levels[d], d == 0,
              a.trie if a.trie.annotation is not None else None)
@@ -290,8 +331,13 @@ class _PipelineDriver:
         else:
             morsel = self._effective_morsel(
                 min(cross, stats_mod.PIPELINE_MAX_BUFFER))
-        self.state = self.backend.pipeline_terminal_fold(
-            self.state, v, cons_desc, sr, morsel)
+        if self.fused:
+            self.plans.append(("fold", v, cons_desc, sr, morsel))
+        else:
+            if self.state is None:
+                self._begin()
+            self.state = self.backend.pipeline_terminal_fold(
+                self.state, v, cons_desc, sr, morsel)
         return True
 
     def _begin(self) -> None:
@@ -307,6 +353,17 @@ class _PipelineDriver:
         the host representation.  Raises PipelineOverflow (before any
         mutation) when a buffer was undersized."""
         gj = self.gj
+        if self.fused and self.plans:
+            # execute the recorded chain now, as ONE traced composite;
+            # atoms were never mutated (depths are shadowed), so their
+            # cursors still describe the pre-bag frontier
+            cursors0 = {id(a): a.cursor for a in gj.atoms
+                        if a.cursor is not None}
+            ann0 = (np.asarray(gj.semiring.lift(1))
+                    if gj.semiring is not None else None)
+            self.state = self.backend.run_bag(cursors0, ann0,
+                                              self.plans)
+            self.plans = []
         if self.state is None:
             ann = (np.asarray(gj.semiring.lift(1))
                    if gj.semiring is not None else None)

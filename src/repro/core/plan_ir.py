@@ -122,6 +122,13 @@ class Extend(PlanOp):
     # unavailable; the pipeline then refuses to size a buffer from it.
     frontier_cap: Optional[float] = None
     morsel: Optional[int] = None
+    # "bitset" when the pipelined counting pass should also intersect a
+    # probe atom's bitset BLOCK directory with the candidate envelope
+    # (sideways filtering: prune before expansion, not just clip) —
+    # annotated only where the statistics density gate expects the probe
+    # level's Algorithm-3 dense cohort to dominate.  None = envelope
+    # clipping only.
+    sideways: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -165,6 +172,9 @@ class BagHints:
     # stats-chosen morsel size for the pipelined fill loop
     # (REPRO_MORSEL_SIZE overrides at run time)
     morsel: Optional[int] = None
+    # var -> "bitset" where the pipelined counting pass should apply
+    # sideways bitset-block filtering (Extend.sideways)
+    extend_sideways: Optional[Dict[str, str]] = None
 
 
 @dataclasses.dataclass
@@ -181,6 +191,7 @@ class BagOps:
         routing = None
         ext_routing = {}
         ext_caps = {}
+        ext_sideways = {}
         morsel = None
         for s in self.steps:
             if isinstance(s, TerminalFold):
@@ -191,13 +202,16 @@ class BagOps:
                     ext_routing[s.var] = s.routing
                 if s.frontier_cap is not None:
                     ext_caps[s.var] = s.frontier_cap
+                if s.sideways is not None:
+                    ext_sideways[s.var] = s.sideways
                 if s.morsel is not None:
                     morsel = s.morsel
         return BagHints(layout_threshold=thr, terminal_routing=routing,
                         est_rows=self.materialize.est_rows,
                         extend_routing=ext_routing or None,
                         extend_caps=ext_caps or None,
-                        morsel=morsel)
+                        morsel=morsel,
+                        extend_sideways=ext_sideways or None)
 
 
 @dataclasses.dataclass
@@ -251,6 +265,7 @@ class PhysicalPlan:
                                       if s.frontier_cap is not None
                                       else None,
                                   "morsel": s.morsel,
+                                  "sideways": s.sideways,
                                   "cost": float(s.cost)})
                 else:
                     steps.append({"op": "terminal_fold", "var": s.var,
@@ -419,12 +434,19 @@ def build_physical_plan(plan: QueryPlan, stats: StatisticsCatalog,
                 # plan search prefers orders with tighter intermediates.
                 cap = min(frontier * S.CAP_HEADROOM,
                           float(S.PIPELINE_MAX_BUFFER))
+                sideways = None
+                if ext_routing == "search":
+                    sideways = _extend_sideways(
+                        accesses, advancing_atoms, atom_arity,
+                        atom_stats, depth, stats, len(cons))
                 cost = (S.extension_cost(rows_into_last, min_cand,
                                          max_cand, len(cons))
+                        * (S.SIDEWAYS_COST_CREDIT if sideways else 1.0)
                         + S.buffer_cost(cap))
                 steps.append(reg(Extend(new_id(), frontier, cost, v,
                                         len(cons), fanout, ext_routing,
-                                        frontier_cap=cap)))
+                                        frontier_cap=cap,
+                                        sideways=sideways)))
             for i in advancing_atoms:
                 depth[i] += 1
             for i in advancing_children:
@@ -593,6 +615,35 @@ def _pair_self_join(accesses, advancing_atoms, advancing_children,
                 or atom_arity[i] != 2
                 or a.selections or b.selections
                 or depth[i] != 1 or depth[j] != 1)
+
+
+def _extend_sideways(accesses, advancing_atoms, atom_arity, atom_stats,
+                     depth, stats: StatisticsCatalog,
+                     n_cons: int) -> Optional[str]:
+    """"bitset" when the pipelined counting pass should sideways-filter
+    through a probe atom's bitset block directory: some constraining
+    arity-2 atom probes its SECOND trie level (depth 1, no selections)
+    and the statistics density gate expects its set level to be
+    dominated by the Algorithm-3 dense cohort
+    (``dense_fraction >= SIDEWAYS_DENSITY_MIN``) — sparse-dominated
+    levels would route most rows past the directory, paying the block
+    searches for nothing.  Needs >= 2 constraining atoms (the seed
+    alone has no probe to filter through)."""
+    if n_cons < 2:
+        return None
+    from repro.core.statistics import (SIDEWAYS_DENSITY_MIN,
+                                       dense_fraction, layout_threshold)
+    for i in advancing_atoms:
+        if (atom_arity[i] != 2 or accesses[i].selections
+                or depth[i] != 1):
+            continue
+        st = atom_stats[i]
+        if st is None or len(st.levels) < 2:
+            continue
+        thr = layout_threshold(st, stats.block_bits)
+        if dense_fraction(st.levels[1], thr) >= SIDEWAYS_DENSITY_MIN:
+            return "bitset"
+    return None
 
 
 def _extend_routing(accesses, advancing_atoms, advancing_children,

@@ -254,8 +254,20 @@ COST_ALLOC = 0.002       # static frontier-buffer slot (zero/scatter traffic)
 # here, once, from the statistics the plan IR already computed.
 CAP_HEADROOM = 2.0           # slack over est_rows before the cross clamp
 PIPELINE_MAX_BUFFER = 1 << 22  # rows; beyond this the pipeline disengages
+PIPELINE_MIN_BUCKET = 8      # smallest frontier-buffer capacity bucket
 DEFAULT_MORSEL = 256
 MORSEL_CHUNK_SHIFT = 5       # fill loops run at most 2**5 = 32 chunks/buffer
+
+# ---------------------------------------------- sideways bitset filtering
+# The counting pass intersects a probe atom's bitset BLOCK directory with
+# the candidate envelope when the plan IR expects its set level to be
+# dominated by the Algorithm-3 dense cohort: pruning before expansion
+# only pays where most probed rows actually own a bitset.
+SIDEWAYS_DENSITY_MIN = 0.5
+# plan-search credit for a sideways-annotated extension: the counting
+# pass prunes rows (and snaps the envelope to populated blocks) before
+# the expansion is sized, so the modelled expansion work shrinks.
+SIDEWAYS_COST_CREDIT = 0.85
 
 
 def default_morsel(est_peak_rows: float) -> int:
@@ -285,11 +297,16 @@ def frontier_capacity(est_cap: Optional[float], cross_bound: int,
     undersized buffer would be caught by the overflow flag, but a
     garbage-sized one is a planner bug we want loud.
 
-    The result is rounded up to a power-of-two multiple of ``morsel``
-    (never below one morsel) so the jitted step retraces on a small set
-    of bucketed shapes.  All arithmetic is Python-int: a pathological
-    ``cross_bound`` (e.g. a dense trie squared) cannot overflow into a
-    negative numpy capacity.
+    The result is bucketed to a power of two (floor
+    :data:`PIPELINE_MIN_BUCKET`) so the jitted step retraces on a small
+    set of bucketed shapes.  The slack over the estimate scales WITH the
+    estimate (half of it, at least 4 rows): sizing slack off the morsel
+    made an est≈1 extension balloon to a full morsel-sized buffer, a
+    256x over-allocation that the fill loop then zeroed and scattered
+    every step (the fill morsel is clamped to the capacity downstream,
+    so a small bucket never starves the chunk loop).  All arithmetic is
+    Python-int: a pathological ``cross_bound`` (e.g. a dense trie
+    squared) cannot overflow into a negative numpy capacity.
     """
     if morsel <= 0:
         raise ValueError(f"morsel size must be positive, got {morsel}")
@@ -301,11 +318,12 @@ def frontier_capacity(est_cap: Optional[float], cross_bound: int,
             f"estimate; got {est_cap!r} (statistics missing or degenerate "
             "when the physical plan was built)")
     cross = min(int(cross_bound), 1 << 62)
-    cap = min(int(est_cap) + morsel, cross, int(max_buffer))
-    cap = max(cap, min(morsel, cross, int(max_buffer)), 1)
-    # bucket: power-of-two multiple of morsel, so repeated queries over
-    # similar cardinalities reuse the compiled step
-    bucket = morsel
+    slack = max(4, int(est_cap) >> 1)
+    cap = min(int(est_cap) + slack, cross, int(max_buffer))
+    cap = max(cap, 1)
+    # bucket: power of two, so repeated queries over similar
+    # cardinalities reuse the compiled step
+    bucket = PIPELINE_MIN_BUCKET
     while bucket < cap:
         bucket <<= 1
     return bucket

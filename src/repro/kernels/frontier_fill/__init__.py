@@ -1,0 +1,5 @@
+"""Frontier-fill Pallas package: the morsel-chunked fill stage of the
+zero-sync count-then-fill extension pipeline as one kernel launch per
+chunk (offset inversion -> seed gather -> branch-free lockstep probes),
+bit-identical to the plain-jnp reference in :mod:`.ref`."""
+from repro.kernels.frontier_fill.ops import CONTRACT, fill_chunk  # noqa: F401

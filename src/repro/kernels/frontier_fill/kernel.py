@@ -1,0 +1,115 @@
+"""Frontier-fill Pallas kernel: one morsel chunk of the count-then-fill
+expansion as a single launch.
+
+The launch stages the chunk's working set in VMEM as ``(1, N)`` row
+vectors (grid ``(1,)``, whole-array blocks with zero index maps: the
+offsets/cursor-bounds rows, the seed level and every probe level) and
+computes, branch-free:
+
+1. **searchsorted offset-inversion** — a fixed-iteration upper-bound
+   binary search maps each output slot ``j`` in
+   ``[c*morsel, (c+1)*morsel)`` back to its source frontier row.  The
+   offsets row is padded with an int32-max sentinel which compares above
+   every live ``j`` (buffer capacities stay below 2^31), so the padded
+   search equals the unpadded ``jnp.searchsorted(offs, j, "right")``.
+2. **seed gather** — absolute seed positions
+   ``p0 = lo0[row] + (j - offs[row])`` and their values.
+3. **lockstep probe** — every probe atom's candidate segment is searched
+   with the SAME fixed-iteration lower-bound loop as
+   ``intersect.segment_searchsorted`` (identical mid/clip/where updates
+   and found test, so positions and membership are bit-exact), AND-ing
+   each atom's membership into the keep mask.
+
+All arithmetic is int32; ``kernel_check`` asserts bit-equality against
+the plain-jnp oracle in :mod:`.ref`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+# int32-max sentinel padding the offsets row: every live output slot
+# index j stays below it (buffer capacities are < 2^31), so the padded
+# upper-bound search returns exactly the unpadded result.
+OFFS_SENTINEL = (1 << 31) - 1
+
+# Fixed binary-search iteration count, matching
+# intersect.segment_searchsorted's default (covers any int32 range).
+_ITERS = 34
+
+
+@functools.lru_cache(maxsize=None)
+def make_fill_kernel(n_probes: int, morsel: int, cap_in: int, n0: int,
+                     nks: Tuple[int, ...]):
+    """Build a kernel body for one (n_probes, morsel, cap_in, n0, nks)
+    geometry — every shape is baked via closure so the traced program is
+    straight-line."""
+
+    def kernel(*refs):
+        c_ref, tc_ref, offs_ref, lo0_ref, seed_ref = refs[:5]
+        probe_refs = refs[5:5 + 3 * n_probes]
+        out_lo = 5 + 3 * n_probes
+        vals_o, row_o, p0_o, keep_o = refs[out_lo:out_lo + 4]
+        pos_os = refs[out_lo + 4:]
+
+        c = c_ref[0, 0]
+        total_c = tc_ref[0, 0]
+        offs = offs_ref[0, :]
+        lo0 = lo0_ref[0, :]
+        seed = seed_ref[0, :]
+
+        j = c * morsel + lax.broadcasted_iota(jnp.int32, (1, morsel), 1)
+
+        # ---- offset inversion: upper bound over the live offsets
+        # prefix [0, cap_in) — the sentinel-padded tail never matches
+        lo_ = jnp.zeros((1, morsel), jnp.int32)
+        hi_ = jnp.full((1, morsel), cap_in, jnp.int32)
+
+        def ub_body(_, st):
+            lo_b, hi_b = st
+            mid = (lo_b + hi_b) >> 1
+            v = offs[jnp.clip(mid, 0, cap_in - 1)]
+            open_ = lo_b < hi_b
+            right = v <= j
+            return (jnp.where(open_ & right, mid + 1, lo_b),
+                    jnp.where(open_ & (~right), mid, hi_b))
+
+        ub, _ = lax.fori_loop(0, _ITERS, ub_body, (lo_, hi_))
+        row = jnp.clip(ub - 1, 0, cap_in - 1)
+        p0 = lo0[row] + (j - offs[row])
+        live = j < total_c
+        vals = seed[jnp.clip(p0, 0, max(n0 - 1, 0))]
+        keep = live
+
+        for k in range(n_probes):
+            vk = probe_refs[3 * k][0, :]
+            lo_k = probe_refs[3 * k + 1][0, :][row]
+            hi_k = probe_refs[3 * k + 2][0, :][row]
+            nk = nks[k]
+
+            # segment_searchsorted's lower-bound loop, verbatim
+            def lb_body(_, st, vk=vk, nk=nk):
+                lo_b, hi_b = st
+                mid = (lo_b + hi_b) >> 1
+                v = vk[jnp.clip(mid, 0, nk - 1)]
+                open_ = lo_b < hi_b
+                right = v < vals
+                return (jnp.where(open_ & right, mid + 1, lo_b),
+                        jnp.where(open_ & (~right), mid, hi_b))
+
+            pos_k, _hi_f = lax.fori_loop(0, _ITERS, lb_body,
+                                         (lo_k, hi_k))
+            in_range = pos_k < hi_k
+            found = in_range & (vk[jnp.clip(pos_k, 0, nk - 1)] == vals)
+            pos_os[k][...] = pos_k
+            keep = keep & found
+
+        vals_o[...] = vals
+        row_o[...] = row
+        p0_o[...] = p0
+        keep_o[...] = keep.astype(jnp.int32)
+
+    return kernel

@@ -1,0 +1,144 @@
+"""Dispatch + contract for the frontier-fill kernel.
+
+``fill_chunk`` is called from INSIDE the extension pipeline's jitted
+morsel ``while_loop`` (``core.backend._extend_body``): one launch per
+chunk, each computing the chunk's offset inversion, seed gather and
+lockstep probes entirely in-kernel.  Inputs are padded to lane-aligned
+``(1, N)`` row blocks here (zero index maps, grid ``(1,)``), so the
+contract checker's tiling assertions hold exactly; the offsets row pads
+with ``OFFS_SENTINEL`` (int32 max), which compares above every live
+output slot and leaves the upper-bound search unchanged.
+
+The package's ``CONTRACT`` feeds ``repro.analysis.kernel_check``:
+representative two-probe inputs with a non-trivial keep/position mix,
+checked bit-exactly against the plain-jnp oracle in :mod:`.ref` (which
+is verbatim the PR 7 fill path — so kernel parity IS engine parity).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, interpret_default, round_up
+from repro.kernels.frontier_fill.kernel import (OFFS_SENTINEL,
+                                                make_fill_kernel)
+
+
+def _row(x, width: int, fill=0):
+    """Pad a 1-D int32 array to ``width`` and lift to a (1, width) row."""
+    x = jnp.asarray(x).astype(jnp.int32)
+    n = x.shape[0]
+    if width > n:
+        x = jnp.pad(x, (0, width - n), constant_values=fill)
+    return x.reshape(1, width)
+
+
+def fill_chunk(c, total_c, offs, lo0, seed_values,
+               probes: Sequence[Tuple], *, morsel: int,
+               interpret: Optional[bool] = None):
+    """One morsel chunk of the count-then-fill expansion, in-kernel.
+
+    Same signature and bit-identical outputs as ``ref.fill_chunk_ref``:
+    returns ``(vals, row, p0, keep, poss)`` for output slots
+    ``[c*morsel, (c+1)*morsel)``.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    cap_in = int(offs.shape[0])
+    n0 = int(seed_values.shape[0])
+    nks = tuple(int(vk.shape[0]) for vk, _lo, _hi in probes)
+    P = round_up(max(cap_in, 1), LANE)
+
+    def zmap(i):
+        return (0, 0)
+
+    scalar_spec = pl.BlockSpec((1, 1), zmap)
+    row_spec = pl.BlockSpec((1, P), zmap)
+    ins = [jnp.reshape(c, (1, 1)).astype(jnp.int32),
+           jnp.reshape(total_c, (1, 1)).astype(jnp.int32),
+           _row(offs, P, OFFS_SENTINEL),
+           _row(lo0, P),
+           _row(seed_values, round_up(max(n0, 1), LANE))]
+    in_specs = [scalar_spec, scalar_spec, row_spec, row_spec,
+                pl.BlockSpec((1, round_up(max(n0, 1), LANE)), zmap)]
+    for (vk, lo_k, hi_k), nk in zip(probes, nks):
+        nkp = round_up(max(nk, 1), LANE)
+        ins += [_row(vk, nkp), _row(lo_k, P), _row(hi_k, P)]
+        in_specs += [pl.BlockSpec((1, nkp), zmap), row_spec, row_spec]
+    n_out = 4 + len(probes)
+    out = pl.pallas_call(
+        make_fill_kernel(len(probes), int(morsel), cap_in, n0, nks),
+        grid=(1,),
+        in_specs=in_specs,
+        out_specs=tuple(pl.BlockSpec((1, int(morsel)), zmap)
+                        for _ in range(n_out)),
+        out_shape=tuple(jax.ShapeDtypeStruct((1, int(morsel)), jnp.int32)
+                        for _ in range(n_out)),
+        interpret=interpret,
+    )(*ins)
+    vals = out[0].reshape(morsel)
+    row = out[1].reshape(morsel)
+    p0 = out[2].reshape(morsel)
+    keep = out[3].reshape(morsel).astype(bool)
+    poss = tuple(o.reshape(morsel) for o in out[4:])
+    return vals, row, p0, keep, poss
+
+
+# ------------------------------------------------------------- contract
+_CONTRACT_MORSEL = 128
+
+
+def _contract_inputs():
+    """Representative two-probe chunk: eight frontier rows expanding
+    into overlapping seed segments, probed into two half-universe
+    levels — keep is a genuine True/False mix and every output carries
+    non-trivial positions (an all-zero result would make the numeric
+    cross-check vacuous)."""
+    rng = np.random.default_rng(0)
+    cap_in, n0 = 8, 64
+    seed_vals = np.sort(rng.choice(200, size=n0,
+                                   replace=False)).astype(np.int32)
+    lo0 = np.sort(rng.integers(0, n0 - 8, size=cap_in)).astype(np.int32)
+    cnt = rng.integers(2, 8, size=cap_in).astype(np.int32)
+    offs = (np.cumsum(cnt) - cnt).astype(np.int32)
+    total = np.asarray(int(offs[-1] + cnt[-1]), np.int32)
+
+    def probe(seed):
+        r = np.random.default_rng(seed)
+        vk = np.sort(r.choice(200, size=96,
+                              replace=False)).astype(np.int32)
+        return (vk, np.zeros(cap_in, np.int32),
+                np.full(cap_in, len(vk), np.int32))
+
+    v1, l1, h1 = probe(1)
+    v2, l2, h2 = probe(2)
+    return (np.zeros((), np.int32), total, offs, lo0, seed_vals,
+            v1, l1, h1, v2, l2, h2)
+
+
+def _contract_entry(c, tc, offs, lo0, seed, v1, l1, h1, v2, l2, h2):
+    vals, row, p0, keep, poss = fill_chunk(
+        c, tc, offs, lo0, seed, ((v1, l1, h1), (v2, l2, h2)),
+        morsel=_CONTRACT_MORSEL, interpret=True)
+    return (vals, row, p0, keep) + poss
+
+
+def _contract_ref(c, tc, offs, lo0, seed, v1, l1, h1, v2, l2, h2):
+    from repro.kernels.frontier_fill.ref import fill_chunk_ref
+
+    vals, row, p0, keep, poss = fill_chunk_ref(
+        c, tc, offs, lo0, seed, ((v1, l1, h1), (v2, l2, h2)),
+        morsel=_CONTRACT_MORSEL)
+    return (vals, row, p0, keep) + poss
+
+
+CONTRACT = {
+    "name": "frontier_fill",
+    "entry": _contract_entry,
+    "ref": _contract_ref,
+    "make_inputs": _contract_inputs,
+}

@@ -220,10 +220,17 @@ def test_frontier_capacity_respects_max_buffer():
         <= S.PIPELINE_MAX_BUFFER
 
 
-def test_frontier_capacity_never_below_one_morsel():
-    assert S.frontier_capacity(0, 10**6, 256) == 256
-    # ... unless the exact bound itself is smaller
+def test_frontier_capacity_tiny_estimates_stay_tiny():
+    # regression: sizing slack off the MORSEL ballooned an est≈1
+    # extension to a full morsel-sized buffer (256x over-allocation
+    # zeroed and scattered every step); slack now scales with the
+    # estimate and the bucket floor is PIPELINE_MIN_BUCKET
+    assert S.frontier_capacity(0, 10**6, 256) == S.PIPELINE_MIN_BUCKET
+    assert S.frontier_capacity(1, 10**6, 2048) == S.PIPELINE_MIN_BUCKET
+    # capacity still covers the true bound when it is small
     assert S.frontier_capacity(0, 3, 256) >= 3
+    # and keeps real estimate-scaled headroom for non-tiny frontiers
+    assert S.frontier_capacity(1000, 10**9, 64) >= 1500
 
 
 def test_frontier_capacity_rejects_unsizable_estimates():
@@ -291,3 +298,227 @@ def test_random_acyclic_queries_match_numpy_oracle(seed):
         assert_same_result(oracle, res_on)
         assert_same_result(oracle, res_off)
         assert d.get("extend.host_syncs", 0) == 0, (q, d)
+
+
+# ------------------------------------------------- whole-bag fusion (PR 8)
+def test_fused_bag_is_one_launch_per_join():
+    """THE launch-budget criterion: with fusion on (the default), every
+    executed bag is ONE jitted program — ``pipeline.launches`` equals
+    ``extend.closing_syncs`` (one landing per join attempt), and is
+    exactly 1 for the single-bag triangle queries."""
+    src, dst, _ = random_undirected_graph(30, 0.3, 7)
+    for qname in ("triangle_count", "triangle_list"):
+        eng = make_engine(src, dst, "device")
+        assert eng.fused_bags          # on by default
+        _, d = sync_delta(eng, PAPER_QUERIES[qname])
+        assert d.get("pipeline.launches", 0) == 1, (qname, d)
+        assert d.get("extend.closing_syncs", 0) == 1, (qname, d)
+        assert d.get("extend.host_syncs", 0) == 0, (qname, d)
+
+
+@pytest.mark.parametrize("qname", sorted(PAPER_QUERIES))
+def test_fused_launches_equal_closing_syncs(qname):
+    """The invariant generalizes to every paper query, multi-bag and
+    recursive ones included: launches == landings, never one launch per
+    attribute step."""
+    src, dst, _ = random_undirected_graph(30, 0.3, 7)
+    q = PAPER_QUERIES[qname].replace("{s}", str(int(src[0])))
+    eng = make_engine(src, dst, "device")
+    _, d = sync_delta(eng, q)
+    assert (d.get("pipeline.launches", 0)
+            == d.get("extend.closing_syncs", 0)), (qname, d)
+
+
+@pytest.mark.parametrize("qname", sorted(PAPER_QUERIES))
+def test_fused_matches_per_step_pipeline(qname):
+    """Satellite 3: Engine(fused_bags=False) pins the per-attribute-step
+    pipeline as the differential oracle — exact parity on every paper
+    query, with the unfused leg paying one launch per step."""
+    src, dst, _ = random_undirected_graph(28, 0.25, 13)
+    q = PAPER_QUERIES[qname].replace("{s}", str(int(src[0])))
+    e_unf = make_engine(src, dst, "device", fused_bags=False)
+    assert not e_unf.fused_bags
+    r_unf, d_unf = sync_delta(e_unf, q)
+    r_fus = make_engine(src, dst, "device", fused_bags=True).query(q)
+    assert_same_result(r_unf, r_fus)
+    # unfused: one launch per pipelined step, not per bag
+    assert d_unf.get("pipeline.launches", 0) == (
+        d_unf.get("extend.pipeline_extends", 0)
+        + d_unf.get("pipeline.device_folds", 0)), (qname, d_unf)
+
+
+@pytest.mark.parametrize("seed", [4, 5])
+def test_random_acyclic_queries_fused_parity(seed):
+    """The seeded-random sweep, fused leg: random graphs x the acyclic
+    shapes, fused vs unfused vs the NumpyBackend — exact, zero host
+    syncs, and never more launches fused than unfused."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 26))
+    m = int(rng.integers(n, 4 * n))
+    src = rng.integers(0, n, m).astype(np.int64)
+    dst = rng.integers(0, n, m).astype(np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+
+    e_np = make_engine(src, dst, "numpy")
+    e_fus = make_engine(src, dst, "device", fused_bags=True)
+    e_unf = make_engine(src, dst, "device", fused_bags=False)
+    for i, (head, body) in enumerate(_SHAPES):
+        agg = (seed + i) % 2 == 0
+        q = _program(head, body, agg)
+        oracle = e_np.query(q)
+        r_fus, d_fus = sync_delta(e_fus, q)
+        r_unf, d_unf = sync_delta(e_unf, q)
+        assert_same_result(oracle, r_fus)
+        assert_same_result(oracle, r_unf)
+        assert d_fus.get("extend.host_syncs", 0) == 0, (q, d_fus)
+        assert (d_fus.get("pipeline.launches", 0)
+                <= d_unf.get("pipeline.launches", 0)), (q, d_fus, d_unf)
+
+
+def test_fused_overflow_retry_one_launch_per_attempt():
+    """Overflow retry under fusion: a lying cap hint trips the sticky
+    overflow flag at landing and the bag re-traces with count-informed
+    sizes — each ATTEMPT is still one launch (launches == landings),
+    zero host syncs, exact answer."""
+    src, dst, _ = random_undirected_graph(24, 0.4, 9)
+    cols = [np.asarray(src, np.int64), np.asarray(dst, np.int64)]
+    ta = Trie.build("E0", ("x", "y"), cols)
+    tb = Trie.build("E1", ("y", "z"), cols)
+    tc = Trie.build("E2", ("x", "z"), cols)
+    hints = BagHints(extend_caps={"x": 1.0, "y": 1.0, "z": 1.0}, morsel=8)
+
+    from repro.core.backend import DeviceBackend, NumpyBackend
+
+    def run(backend, h):
+        gj = GenericJoin(
+            [(ta, ("x", "y")), (tb, ("y", "z")), (tc, ("x", "z"))],
+            ("x", "y", "z"), ("x", "y", "z"), backend=backend, hints=h)
+        return gj.run()
+
+    oracle = run(NumpyBackend(), None)
+    dev = DeviceBackend()
+    assert dev.fuse_bags
+    res = run(dev, hints)
+    assert_same_result(oracle, res)
+    st = dict(dev.stats)
+    assert st.get("pipeline.retries", 0) >= 1, st
+    assert st.get("extend.host_syncs", 0) == 0, st
+    assert (st.get("pipeline.launches", 0)
+            == st.get("extend.closing_syncs", 0)), st
+
+
+def test_fused_env_escape_hatch(monkeypatch):
+    """REPRO_FUSED_BAG=off pins the per-step pipeline — still exact,
+    still zero host syncs, one launch per step."""
+    monkeypatch.setenv("REPRO_FUSED_BAG", "off")
+    src, dst, _ = random_undirected_graph(20, 0.3, 5)
+    oracle = make_engine(src, dst, "numpy").query(
+        PAPER_QUERIES["triangle_list"])
+    eng = make_engine(src, dst, "device")
+    assert not eng.fused_bags
+    res, d = sync_delta(eng, PAPER_QUERIES["triangle_list"])
+    assert_same_result(oracle, res)
+    assert d.get("extend.host_syncs", 0) == 0, d
+    assert d.get("pipeline.launches", 0) == (
+        d.get("extend.pipeline_extends", 0)
+        + d.get("pipeline.device_folds", 0)) > 1, d
+
+
+def test_frontier_fill_jnp_mode_parity(monkeypatch):
+    """REPRO_FRONTIER_FILL=jnp swaps the Pallas fill kernel for its jnp
+    reference inside the same traced program — bit-identical results."""
+    monkeypatch.setenv("REPRO_FRONTIER_FILL", "jnp")
+    src, dst, _ = random_undirected_graph(22, 0.3, 3)
+    oracle = make_engine(src, dst, "numpy").query(PAPER_QUERIES["4clique"])
+    eng = make_engine(src, dst, "device")
+    assert eng.backend.fill_mode == "jnp"
+    res, d = sync_delta(eng, PAPER_QUERIES["4clique"])
+    assert_same_result(oracle, res)
+    assert d.get("extend.host_syncs", 0) == 0, d
+
+
+def test_wall_split_compile_then_steady():
+    """The dispatch-wall split: the first execution of a bag shape lands
+    in the compile bucket, re-dispatching the SAME traced program lands
+    in steady — both observable through ``wall_split()``."""
+    from repro.core.executor import BagResultCache
+    src, dst, _ = random_undirected_graph(20, 0.3, 5)
+    eng = make_engine(src, dst, "device")
+    eng.query(PAPER_QUERIES["triangle_count"])
+    ws = eng.backend.wall_split()
+    assert ws["pipeline.wall_compile_s"] > 0, ws
+    steady0 = ws["pipeline.wall_steady_s"]
+    # a fresh bag cache so the second run re-DISPATCHES (the engine-
+    # lifetime cache would otherwise answer without launching anything)
+    eng.bag_cache = BagResultCache()
+    eng.query(PAPER_QUERIES["triangle_count"])
+    ws2 = eng.backend.wall_split()
+    assert ws2["pipeline.wall_steady_s"] > steady0, ws2
+    # the wall split is timing, NOT part of the exact-gated counters
+    assert "pipeline.wall_compile_s" not in eng.backend.stats
+
+
+# ------------------------------------------- bitset sideways filtering
+def _complete_graph(n):
+    s, d = np.nonzero(~np.eye(n, dtype=bool))
+    return s.astype(np.int64), d.astype(np.int64)
+
+
+def test_sideways_bitset_fires_on_dense_graph(monkeypatch):
+    """Tentpole leg 3: on a dense graph the planner annotates depth-1
+    probes ``sideways='bitset'`` and the counting pass intersects
+    Figure-6 block directories — counter-proven (``pipeline.sideways_
+    extends`` + one bitset-directory upload), exact against both the
+    numpy oracle and the REPRO_SIDEWAYS_BITSET=off leg."""
+    src, dst = _complete_graph(14)
+    oracle = make_engine(src, dst, "numpy").query(PAPER_QUERIES["4clique"])
+    eng = make_engine(src, dst, "device")
+    res, d = sync_delta(eng, PAPER_QUERIES["4clique"])
+    assert_same_result(oracle, res)
+    assert d.get("pipeline.sideways_extends", 0) >= 1, d
+    assert d.get("upload.bitset_dirs", 0) >= 1, d
+    assert d.get("extend.host_syncs", 0) == 0, d
+
+    monkeypatch.setenv("REPRO_SIDEWAYS_BITSET", "off")
+    eng2 = make_engine(src, dst, "device")
+    res2, d2 = sync_delta(eng2, PAPER_QUERIES["4clique"])
+    assert_same_result(oracle, res2)
+    assert d2.get("pipeline.sideways_extends", 0) == 0, d2
+
+
+def test_sideways_stays_off_on_sparse_graph():
+    """The statistics density gate: adjacency sets whose neighbors are
+    scattered across a wide ID range (inverse density above the
+    Algorithm-3 threshold) fall in the sparse cohort, so the planner
+    must not annotate sideways filtering.  NB small-universe graphs
+    don't exercise this — a degree-1 set has span 1 and is trivially
+    'dense' — hence the deliberately spread-out degree-2 graph."""
+    rng = np.random.default_rng(17)
+    n = 4000
+    src = np.repeat(np.arange(n, dtype=np.int64), 2)
+    dst = rng.integers(0, n, 2 * n).astype(np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    eng = make_engine(src, dst, "device")
+    _, d = sync_delta(eng, PAPER_QUERIES["4clique"])
+    assert d.get("pipeline.sideways_extends", 0) == 0, d
+    from repro.core.plan_ir import Extend
+    assert all(s.sideways is None
+               for b in eng.last_physical.bag_ops
+               for s in b.steps if isinstance(s, Extend))
+
+
+def test_sideways_parity_unfused_and_listing(monkeypatch):
+    """Sideways filtering composes with both execution modes: the dense
+    graph's 4-clique LISTING answers identically with fusion off, and
+    the annotation survives into the per-step pipeline too."""
+    src, dst = _complete_graph(12)
+    q = "Q(x,y,z,w) :- R(x,y),S(x,z),T(x,w),U(y,z),X(y,w),Y(z,w)."
+    oracle = make_engine(src, dst, "numpy").query(q)
+    r_fus = make_engine(src, dst, "device").query(q)
+    e_unf = make_engine(src, dst, "device", fused_bags=False)
+    r_unf, d_unf = sync_delta(e_unf, q)
+    assert_same_result(oracle, r_fus)
+    assert_same_result(oracle, r_unf)
+    assert d_unf.get("pipeline.sideways_extends", 0) >= 1, d_unf

@@ -24,7 +24,7 @@ def make_engine(src, dst, **kw):
 def test_all_kernel_contracts_pass():
     counts = kernel_check.check_all()
     assert set(counts) == {"uint_intersect", "bitset_intersect",
-                           "materialize"}
+                           "materialize", "frontier_fill"}
     assert all(n >= 1 for n in counts.values())
 
 

@@ -258,3 +258,26 @@ def test_search_candidates_all_validated():
                    bag_cache=eng.bag_cache, verify=True, counter=counter)
     assert counter["analysis.candidates_verified"] == sr.candidates
     assert verify_physical_plan(sr.physical, eng.catalog) == []
+
+
+# ----------------------------------------------------- rejected: sideways
+def test_sideways_annotation_invalid_rejected():
+    """PR 8: sideways bitset filtering is a VALIDATED annotation — an
+    unknown value, or 'bitset' on a step whose counting pass has no
+    depth-1 arity-2 probe to intersect block directories for, is a
+    static error before any tuple moves."""
+    eng, pp = triangle_plan()
+    from repro.core.plan_ir import Extend
+    first = next(s for s in pp.bag_ops[0].steps if isinstance(s, Extend))
+    assert first.sideways is None      # the root extension never has it
+    first.sideways = "bloom"           # not in the legal vocabulary
+    vs = verify_physical_plan(pp, eng.catalog, eng.stats_catalog)
+    assert "sideways-invalid" in codes(vs)
+    # 'bitset' on the ROOT extension: every probe is at trie depth 0,
+    # so there is no second-level block directory to intersect
+    first.sideways = "bitset"
+    vs = verify_physical_plan(pp, eng.catalog, eng.stats_catalog)
+    assert "sideways-invalid" in codes(vs)
+    first.sideways = None
+    assert "sideways-invalid" not in codes(
+        verify_physical_plan(pp, eng.catalog, eng.stats_catalog))
