@@ -41,6 +41,13 @@ Checks, each with a stable violation ``code``:
     canonicalized structure, alias-resolved relation names, and
     ``reuse_rels`` covering every relation the bag's subtree reads (an
     incomplete set would let a stale cached result survive a reload).
+  * ``param-selection`` — bind-parameter selections (prepared queries):
+    every ``datalog.Param`` appearing as a selection constant must carry
+    a non-negative integer slot, and the slots used across the whole
+    plan must be contiguous from 0 — the shape
+    ``compile.parameterize`` emits and ``PreparedQuery._binding``
+    indexes into.  A gap would make some positional argument silently
+    unused; a bad slot would crash (or worse, mis-bind) at encode time.
 """
 from __future__ import annotations
 
@@ -49,6 +56,7 @@ import math
 
 from repro.core import plan_ir
 from repro.core import statistics
+from repro.core.datalog import Param
 from repro.core.plan_ir import (BagOps, BagScan, Extend, MaterializeShared,
                                 PhysicalPlan, TerminalFold, TopDownJoin)
 from repro.core.statistics import BASE_BLOCK_BITS, MAX_THRESHOLD_BITS
@@ -147,7 +155,40 @@ def verify_physical_plan(pplan: PhysicalPlan, catalog=None, stats=None,
     _verify_final(pplan, materialized, add)
     if pplan.final is not None:
         check_registered(pplan.final, "final")
+    _verify_params(pplan, add)
     return out
+
+
+def _verify_params(pplan: PhysicalPlan, add) -> None:
+    """Bind-parameter selections: Param slots valid and contiguous.
+
+    ``compile.parameterize`` assigns slots ``0..n-1`` in first-appearance
+    order, and ``engine.PreparedQuery`` binds positionally against that
+    range — so any Param with a non-int / negative slot, or a slot set
+    with gaps, is a plan that cannot have come from the prepared-query
+    path and would mis-bind at encode time.
+    """
+    slots: set[int] = set()
+    for bops in pplan.bag_ops:
+        where = f"bag#{bops.materialize.op_id}"
+        for acc in bops.scan.accesses:
+            for pos, value in acc.selections:
+                if not isinstance(value, Param):
+                    continue
+                if not isinstance(value.slot, int) or value.slot < 0:
+                    add(PlanViolation(
+                        "param-selection", where,
+                        f"{acc.rel}[{pos}]: Param slot {value.slot!r} is "
+                        f"not a non-negative int"))
+                else:
+                    slots.add(value.slot)
+    if slots and slots != set(range(max(slots) + 1)):
+        missing = sorted(set(range(max(slots) + 1)) - slots)
+        add(PlanViolation(
+            "param-selection", "plan",
+            f"bind-parameter slots {sorted(slots)} are not contiguous "
+            f"from 0 (missing {missing}) — positional binding would "
+            f"leave arguments unused"))
 
 
 # --------------------------------------------------------------- per bag

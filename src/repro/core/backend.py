@@ -176,6 +176,12 @@ class ExecBackend:
     def dispatch_summary(self) -> Dict[str, int]:
         return dict(self.stats)
 
+    def trace_count(self) -> int:
+        """Number of distinct traced program shapes this backend has
+        compiled — the retrace-proof counter for the serving layer's
+        no-recompile-on-rebind invariant. Host backends trace nothing."""
+        return 0
+
 
 class NumpyBackend(ExecBackend):
     """Seed behaviour: host-side expansion, one search (and one host
@@ -309,6 +315,9 @@ class DeviceBackend(ExecBackend):
     def wall_split(self) -> Dict[str, float]:
         return {"pipeline.wall_compile_s": round(self.wall_compile_s, 6),
                 "pipeline.wall_steady_s": round(self.wall_steady_s, 6)}
+
+    def trace_count(self) -> int:
+        return len(self._traced)
 
     def _sideways_dev(self, cons):
         """Per-probe device sideways tuples + static block_bits for an
@@ -542,6 +551,34 @@ class DeviceBackend(ExecBackend):
         per bag; the closing ``pipeline_land`` stays the only transfer.
         """
         self.stats["pipeline.launches"] += 1
+        prog_t, arrays, canon, cap = self._lower_bag(steps, cursors0)
+        cur_canon = {canon[k]: self._up_idx(c)
+                     for k, c in cursors0.items()}
+        ann = jnp.asarray(ann0) if ann0 is not None else None
+        (count, overflow, morsels, lcounts, needs, cols, cursors,
+         ann_o) = self._timed(
+            ("bag", prog_t, self.fill_mode),
+            _bag_program, tuple(arrays), cur_canon, ann,
+            prog=prog_t, fill_mode=self.fill_mode,
+            fill_interpret=self._fill_interpret)
+        id_of = {v: k for k, v in canon.items()}
+        lvars = [s[1] for s in prog_t if s[0] in ("extend", "fold")]
+        evars = [s[1] for s in prog_t if s[0] == "extend"]
+        return DeviceFrontier(
+            cap=cap, count=count, overflow=overflow, morsels=morsels,
+            cols=dict(cols),
+            cursors={id_of[c]: cur for c, cur in cursors.items()},
+            ann=ann_o, level_counts=list(zip(lvars, lcounts)),
+            needed=list(zip(evars, needs)))
+
+    def _lower_bag(self, steps: Sequence[Tuple],
+                   cursors0: Dict[int, np.ndarray]):
+        """Lower a host-recorded bag chain to the pure hashable program
+        ``_bag_program`` consumes: ``(prog, arrays, canon, final cap)``.
+        Shared by the single-query ``run_bag`` and the vmapped
+        ``run_bag_batched`` — the program is identical; only the cursor
+        rank differs.  Dispatch counters for the chain's steps are
+        charged here, once per lowered chain."""
         canon: Dict[int, int] = {}
 
         def ckey(k):
@@ -619,25 +656,82 @@ class DeviceBackend(ExecBackend):
                 prog.append(("annmul", ckey(key), ann_i, sr))
             else:
                 raise ValueError(f"unknown bag step {kind!r}")
-        prog_t = tuple(prog)
+        return tuple(prog), arrays, canon, cap
+
+    def run_bag_batched(self, cursors0: Dict[int, np.ndarray],
+                        ann0: Optional[np.ndarray],
+                        steps: Sequence[Tuple]) -> "BatchedFrontier":
+        """Execute B same-shape bag instances as ONE fused device launch.
+
+        ``cursors0`` maps each pre-bound atom to a ``[B, 1]`` cursor
+        stack — one row per query.  The chain is lowered through the
+        SAME ``_lower_bag`` as the single-query path, then dispatched
+        through ``_bag_program_batch``: ``jax.vmap`` maps the leading
+        batch dimension over the cursors while the operand arrays (trie
+        levels — shared by every query) stay unbatched.  One launch
+        (``pipeline.launches`` += 1, ``pipeline.batched_launches`` += 1)
+        serves all B probes; ``pipeline_land_batched`` is the single
+        closing transfer.
+
+        The fill stage is pinned to the plain-jnp reference path:
+        ``lax.while_loop`` under vmap is fine (the cond becomes
+        any-active), but the frontier-fill Pallas kernel is not vetted
+        under a batching rule — and the reference is bit-identical by
+        the kernel contract, so batched-vs-sequential parity stays
+        EXACT.
+        """
+        b = next(iter(cursors0.values())).shape[0]
+        self.stats["pipeline.launches"] += 1
+        self.stats["pipeline.batched_launches"] += 1
+        self.stats["pipeline.batched_queries"] += int(b)
+        prog_t, arrays, canon, cap = self._lower_bag(steps, cursors0)
         cur_canon = {canon[k]: self._up_idx(c)
                      for k, c in cursors0.items()}
         ann = jnp.asarray(ann0) if ann0 is not None else None
         (count, overflow, morsels, lcounts, needs, cols, cursors,
          ann_o) = self._timed(
-            ("bag", prog_t, self.fill_mode),
-            _bag_program, tuple(arrays), cur_canon, ann,
-            prog=prog_t, fill_mode=self.fill_mode,
-            fill_interpret=self._fill_interpret)
+            ("bag_batch", prog_t, int(b)),
+            _bag_program_batch, tuple(arrays), cur_canon, ann,
+            prog=prog_t, fill_interpret=self._fill_interpret)
         id_of = {v: k for k, v in canon.items()}
         lvars = [s[1] for s in prog_t if s[0] in ("extend", "fold")]
         evars = [s[1] for s in prog_t if s[0] == "extend"]
-        return DeviceFrontier(
-            cap=cap, count=count, overflow=overflow, morsels=morsels,
-            cols=dict(cols),
+        return BatchedFrontier(
+            batch=int(b), cap=cap, count=count, overflow=overflow,
+            morsels=morsels, cols=dict(cols),
             cursors={id_of[c]: cur for c, cur in cursors.items()},
             ann=ann_o, level_counts=list(zip(lvars, lcounts)),
             needed=list(zip(evars, needs)))
+
+    def pipeline_land_batched(self, state: "BatchedFrontier"):
+        """THE closing sync of a batched bag run: every query's compacted
+        frontier, per-level counts and overflow flag in ONE transfer
+        (``extend.closing_syncs`` += 1 for the whole batch)."""
+        scal = jnp.stack(
+            [state.count.astype(_IDX), state.overflow.astype(_IDX),
+             state.morsels.astype(_IDX)]
+            + [c.astype(_IDX) for _v, c in state.level_counts]
+            + [t.astype(_IDX) for _v, t in state.needed])   # [3+nl+nn, B]
+        col_keys = list(state.cols)
+        cur_keys = list(state.cursors)
+        vecs = ([state.cols[k].astype(_IDX) for k in col_keys]
+                + [state.cursors[k] for k in cur_keys])
+        packed = jnp.stack(vecs) if vecs else None          # [nv, B, cap]
+        scal_h, packed_h, ann = host_get((scal, packed, state.ann))
+        self.stats["extend.closing_syncs"] += 1
+        nl = len(state.level_counts)
+        counts = np.asarray(scal_h[0], dtype=np.int64)
+        overflows = np.asarray(scal_h[1]).astype(bool)
+        self.stats["pipeline.morsels"] += int(np.asarray(scal_h[2]).sum())
+        # worst case over the batch per variable: the retry loop sizes
+        # ONE shared buffer shape for every query in the batch
+        needed = {v: int(np.asarray(t).max(initial=0)) for (v, _), t in
+                  zip(state.needed, scal_h[3 + nl:])}
+        cols = {k: np.asarray(packed_h[i]) for i, k in enumerate(col_keys)}
+        cursors = {k: np.asarray(packed_h[len(col_keys) + i])
+                   for i, k in enumerate(cur_keys)}
+        ann = np.asarray(ann) if ann is not None else None
+        return (counts, overflows, cols, cursors, ann, needed)
 
     def pipeline_land(self, state: "DeviceFrontier"):
         """THE closing sync: fetch the compacted frontier (columns,
@@ -692,6 +786,42 @@ class DeviceFrontier:
     ann: Optional[jnp.ndarray]          # semiring annotation [cap]
     level_counts: List                  # [(var, count snapshot)]
     needed: List                        # [(var, counting-pass total)]
+
+
+@dataclasses.dataclass
+class BatchedFrontier:
+    """``DeviceFrontier`` with a leading batch dimension: B same-shape
+    bag instances executed by one vmapped program.  Every per-query
+    field gains axis 0 of extent ``batch``; ``cap`` stays the (shared)
+    static buffer capacity."""
+
+    batch: int                          # B
+    cap: int                            # static buffer capacity (shared)
+    count: jnp.ndarray                  # [B] live rows per query
+    overflow: jnp.ndarray               # [B] bool, sticky per query
+    morsels: jnp.ndarray                # [B] fill chunks per query
+    cols: Dict[str, jnp.ndarray]        # var -> int32 [B, cap]
+    cursors: Dict[int, jnp.ndarray]     # id(atom) -> positions [B, cap]
+    ann: Optional[jnp.ndarray]          # semiring annotation [B, cap]
+    level_counts: List                  # [(var, [B] counts)]
+    needed: List                        # [(var, [B] counting totals)]
+
+
+@partial(jax.jit, static_argnames=("prog", "fill_interpret"))
+def _bag_program_batch(arrays, cursors0, ann, *, prog: Tuple,
+                       fill_interpret: bool):
+    """B same-shape bag instances as ONE traced program: ``jax.vmap``
+    over the leading cursor axis of ``_bag_program``'s body.  The
+    operand ``arrays`` (trie levels, annotations, bitset directories)
+    are closed over un-batched — every query reads the same resident
+    relations — so XLA sees one module whose only batched inputs are the
+    ``[B, 1]`` pre-bound cursors.  The trace key is (bag shape, B): a
+    re-bound batch of the same size relaunches without retracing."""
+    def one(cur):
+        return _bag_program(arrays, cur, ann, prog=prog,
+                            fill_mode="jnp",
+                            fill_interpret=fill_interpret)
+    return jax.vmap(one)(cursors0)
 
 
 def _bounds(values, offsets, cursor, cap_in, valid):

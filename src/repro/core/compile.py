@@ -21,7 +21,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import ghd as ghd_mod
-from repro.core.datalog import Atom, Const, Rule, Var, expr_agg
+from repro.core.datalog import Atom, Const, Param, Rule, Var, expr_agg
 from repro.core.ghd import GHD, Bag
 from repro.core.hypergraph import Hypergraph
 from repro.core.semiring import AGG_TO_SEMIRING, COUNT, Semiring
@@ -189,6 +189,39 @@ def compile_rule(rule: Rule, use_ghd: bool = True,
                      output_vars, needs_top_down)
 
 
+def parameterize(rule: Rule) -> Tuple[Rule, Tuple[object, ...]]:
+    """Rewrite body selection constants into ``Param`` bind-slots.
+
+    Returns ``(rule_p, defaults)`` where ``rule_p`` has every body
+    ``Const(v)`` replaced by ``Const(Param(slot))`` and ``defaults[slot]``
+    is the constant the slot replaced. Slots are assigned one per
+    DISTINCT constant value in first-appearance order, so a query like
+    "triangles through vertex v" — the same literal in two atoms — binds
+    both occurrences with one argument. (Corollary: two occurrences of
+    the same literal cannot be re-bound independently; write distinct
+    literals in the template if you need distinct slots.)
+
+    ``repr(rule_p)`` is binding-independent, which is the whole point:
+    the engine's logical/search/physical caches and the backend's traced
+    bag programs key on it, so re-binding reuses all of them.
+    """
+    slots: Dict[object, int] = {}
+    body: List[Atom] = []
+    for atom in rule.body:
+        terms: List[object] = []
+        for t in atom.terms:
+            if isinstance(t, Const) and not isinstance(t.value, Param):
+                if t.value not in slots:
+                    slots[t.value] = len(slots)
+                terms.append(Const(Param(slots[t.value])))
+            else:
+                terms.append(t)
+        body.append(Atom(atom.rel, tuple(terms)))
+    rule_p = dataclasses.replace(rule, body=tuple(body))
+    defaults = tuple(sorted(slots, key=slots.get))
+    return rule_p, defaults
+
+
 def _retain_connectors(bp: BagPlan):
     for c in bp.children:
         _retain_connectors(c)
@@ -215,12 +248,15 @@ def _dedup_key(bp: BagPlan, semiring) -> Tuple:
     # Canonicalize in var_order so positional roles match across renamings.
     for v in bp.var_order:
         cv(v)
+    # key=repr: column keys mix canonical ints with ("$", const) selection
+    # markers, which Python refuses to order when two atoms share a
+    # relation name — repr gives a deterministic total order
     atom_keys = tuple(sorted(
-        (a.rel,
-         tuple(cv(v) if not v.startswith("$sel") else ("$", a.selections[p])
-               for p, v in enumerate(a.vars)))
-        for a in bp.atoms))
+        ((a.rel,
+          tuple(cv(v) if not v.startswith("$sel") else ("$", a.selections[p])
+                for p, v in enumerate(a.vars)))
+         for a in bp.atoms), key=repr))
     out_key = tuple(cv(v) for v in bp.output_vars)
-    child_keys = tuple(sorted(c.dedup_key for c in bp.children))
+    child_keys = tuple(sorted((c.dedup_key for c in bp.children), key=repr))
     sr_key = semiring.name if semiring is not None else None
     return (atom_keys, out_key, sr_key, child_keys)

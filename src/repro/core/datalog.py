@@ -33,10 +33,31 @@ class Var:
 
 @dataclasses.dataclass(frozen=True)
 class Const:
-    value: Union[int, str, float]
+    value: Union[int, str, float, "Param"]
 
     def __repr__(self):
         return repr(self.value)
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A bind-parameter slot standing in for a selection constant.
+
+    ``Engine.prepare`` rewrites every body ``Const(v)`` to
+    ``Const(Param(slot))`` (one slot per distinct constant value, in
+    first-appearance order), so the rule's ``repr`` — and with it every
+    compile/plan/trace cache key — is stable across bindings. The actual
+    value is supplied at run time through the binding-aware ``encode``
+    closure; it never reaches a compile key.
+
+    ``repr`` is eval-able on purpose: parameterized selections survive
+    the codegen round-trip (`emit_source` embeds ``encode({v!r})``).
+    """
+
+    slot: int
+
+    def __repr__(self):
+        return f"Param({self.slot})"
 
 
 @dataclasses.dataclass(frozen=True)

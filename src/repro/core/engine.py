@@ -39,11 +39,12 @@ from repro.core import plan_ir
 from repro.core import plan_search as plan_search_mod
 from repro.core import recursion as recursion_mod
 from repro.core.backend import ExecBackend, make_backend
-from repro.core.compile import QueryPlan, compile_rule
-from repro.core.datalog import (AggRef, Num, Rule, ScalarRef, Var, eval_expr,
-                                parse)
-from repro.core.executor import BagResultCache, Catalog, Executor
-from repro.core.gj import GJResult
+from repro.core.compile import QueryPlan, compile_rule, parameterize
+from repro.core.datalog import (AggRef, Num, Param, Rule, ScalarRef, Var,
+                                eval_expr, parse)
+from repro.core.executor import (BagResultCache, Catalog, Executor,
+                                 apply_expr)
+from repro.core.gj import GenericJoin, GJResult, run_batched
 from repro.core.semiring import AGG_TO_SEMIRING, MAX_MIN, MIN_PLUS, SUM_F32
 from repro.core.statistics import StatisticsCatalog
 from repro.core.trie import Trie
@@ -121,6 +122,62 @@ class QueryResult:
         assert len(self.vars) == 1
         keys = self.columns[self.vars[0]]
         return dict(zip(keys.tolist(), self.annotation.tolist()))
+
+
+@dataclasses.dataclass
+class PreparedQuery:
+    """A single rule compiled once, selection constants as bind slots.
+
+    ``rule`` carries ``Const(Param(slot))`` placeholders (one slot per
+    distinct constant in the source text, first-appearance order) and
+    ``defaults`` the constants they replaced.  Because ``repr(rule)`` is
+    binding-independent, every compile-side cache — logical plan, plan
+    search decision, physical plan + emitted source, and the backend's
+    traced bag programs — is shared across bindings: re-binding performs
+    zero plan searches and zero retraces (``compile.*`` counters and
+    ``backend.trace_count()`` prove it).
+
+    ``run(*params)`` executes one binding; ``run_batch(bindings)``
+    executes many, as ONE fused vmapped device launch per
+    ``statistics.max_batch`` chunk where the plan shape allows, falling
+    back to the sequential per-binding loop (the exact-parity oracle)
+    otherwise.  Neither materializes the head relation.
+    """
+
+    engine: "Engine"
+    rule: Rule
+    defaults: Tuple[object, ...]
+
+    @property
+    def n_params(self) -> int:
+        return len(self.defaults)
+
+    def _binding(self, params: Tuple) -> Tuple:
+        if not params:
+            return tuple(self.defaults)
+        if len(params) != len(self.defaults):
+            raise ValueError(
+                f"expected {len(self.defaults)} parameters "
+                f"(defaults {self.defaults}), got {len(params)}")
+        return tuple(params)
+
+    def run(self, *params) -> QueryResult:
+        binding = self._binding(params)
+        enc = self.engine._binding_encode(binding)
+        return self.engine._eval_rule(self.rule, materialize=False,
+                                      encode=enc)
+
+    __call__ = run
+
+    def run_batch(self, bindings) -> List[QueryResult]:
+        """Execute many bindings; results in submission order.  Each
+        entry is a parameter tuple (a bare scalar binds a 1-slot rule)."""
+        norm = [self._binding(tuple(b) if isinstance(b, (tuple, list))
+                              else (b,)) for b in bindings]
+        out = self.engine._execute_batch(self.rule, norm)
+        if out is None:
+            out = [self.run(*b) for b in norm]
+        return out
 
 
 class Engine:
@@ -228,6 +285,22 @@ class Engine:
             return int(value)
         return int(self.dictionary[value])
 
+    def _binding_encode(self, binding: Tuple):
+        """Encode closure resolving ``Param`` slots against ``binding``.
+
+        Carries ``binding_key`` so runtime result-reuse keys (the
+        engine-lifetime bag cache) distinguish bindings even though the
+        parameterized rule's STRUCTURAL keys are binding-invariant."""
+        base = self.encode
+
+        def enc(value):
+            if isinstance(value, Param):
+                return base(binding[value.slot])
+            return base(value)
+
+        enc.binding_key = tuple(binding)
+        return enc
+
     # ---------------------------------------------------------------- query
     def query(self, text: str) -> QueryResult:
         """Run a datalog program; returns the result of the LAST head."""
@@ -245,6 +318,22 @@ class Engine:
                 result = self._eval_rule(rule, materialize=True or is_star_base)
         assert result is not None, "empty program"
         return result
+
+    def prepare(self, text: str) -> PreparedQuery:
+        """Compile ONE non-recursive rule with its selection constants
+        rewritten into bind parameters (``compile.parameterize``); the
+        returned :class:`PreparedQuery` re-binds without recompiling.
+        The logical plan is warmed here; physical planning stays lazy
+        because it keys on the catalog versions at first execution."""
+        prog = parse(text)
+        if len(prog.rules) != 1:
+            raise ValueError("prepare() takes exactly one rule")
+        rule = prog.rules[0]
+        if rule.recursion is not None:
+            raise ValueError("prepare() does not support recursive rules")
+        rule_p, defaults = parameterize(rule)
+        self._compile(rule_p)
+        return PreparedQuery(self, rule_p, defaults)
 
     def explain(self, text: str) -> str:
         prog = parse(text)
@@ -290,10 +379,13 @@ class Engine:
         key = (repr(rule), self.use_ghd)
         plan = self._plan_cache.get(key)
         if plan is None:
+            self.backend.stats["compile.logical_compiles"] += 1
             plan = compile_rule(rule, use_ghd=self.use_ghd)
             if plan.semiring is not None and plan.needs_top_down:
                 plan = compile_rule(rule, use_ghd=False)
             self._plan_cache[key] = plan
+        else:
+            self.backend.stats["compile.plan_cache_hits"] += 1
         self.last_plan = plan
         return plan
 
@@ -316,11 +408,13 @@ class Engine:
                self.plan_search, self.catalog.version_key(rels))
         hit = self._physical_cache.get(key)
         if hit is None:
+            self.backend.stats["compile.physical_builds"] += 1
             search_md = None
             if self.plan_search:
                 dkey = (repr(plan.rule), self.use_ghd)
                 decided = self._search_cache.get(dkey)
                 if decided is None:
+                    self.backend.stats["compile.plan_searches"] += 1
                     sr = plan_search_mod.search(
                         plan, self.stats_catalog, self.catalog,
                         bag_cache=self.bag_cache, use_ghd=self.use_ghd,
@@ -352,21 +446,24 @@ class Engine:
             if len(self._physical_cache) >= 256:
                 self._physical_cache.pop(next(iter(self._physical_cache)))
             hit = self._physical_cache[key] = (pplan, fn, src, search_md)
+        else:
+            self.backend.stats["compile.physical_cache_hits"] += 1
         return hit
 
-    def _execute(self, plan: QueryPlan) -> GJResult:
+    def _execute(self, plan: QueryPlan, encode=None) -> GJResult:
         pplan, fn, src, search_md = self._physical(plan)
         self.last_physical = pplan
+        enc = encode if encode is not None else self.encode
         # sanitize: snapshot AFTER planning (verification counters are not
         # execution dispatch) so the delta is exactly this rule's dispatch
         stats_before = dict(self.backend.stats) if self.sanitize else None
         metrics: Dict[int, dict] = {}
         if self.use_codegen:
             self.last_source = src
-            res = fn(self.catalog, self.encode, self.backend,
+            res = fn(self.catalog, enc, self.backend,
                      bag_cache=self.bag_cache, metrics=metrics)
         else:
-            ex = Executor(self.catalog, self.encode, backend=self.backend,
+            ex = Executor(self.catalog, enc, backend=self.backend,
                           bag_cache=self.bag_cache,
                           stats_catalog=self.stats_catalog)
             res = ex.run(pplan)
@@ -395,18 +492,68 @@ class Engine:
         self._program_metadata.append(md)
         return res
 
-    def _eval_rule(self, rule: Rule, materialize: bool) -> QueryResult:
+    def _execute_batch(self, rule: Rule,
+                       bindings: List[Tuple]) -> Optional[List[QueryResult]]:
+        """Batched lowering of a prepared rule: one GenericJoin per
+        binding over the SAME physical plan, handed to ``gj.run_batched``
+        for fused vmapped execution.  Returns None when the shape is
+        outside the batchable envelope — multi-bag plans, top-down joins,
+        count-distinct rewrites, host backends — and the caller falls
+        back to the sequential per-binding loop, the exact-parity oracle.
+
+        The engine-lifetime bag cache and the dispatch sanitizer are
+        bypassed on purpose: per-binding probe results are cheaper to
+        recompute than to cache, and the sanitizer's per-rule dispatch
+        model does not describe a batched launch.
+        """
         agg = rule.agg
         if agg is not None and agg.op == "count" and agg.arg != "*":
-            res = self._eval_count_distinct(rule, agg)
+            return None
+        plan = self._compile(rule)
+        pplan, _fn, _src, _md = self._physical(plan)
+        if len(pplan.bag_ops) != 1 or pplan.final is not None:
+            return None
+        bops = pplan.bag_ops[0]
+        if bops.scan.child_inputs:
+            return None
+        lplan = pplan.logical
+        joins: List[GenericJoin] = []
+        for binding in bindings:
+            enc = self._binding_encode(binding)
+            gj_atoms = []
+            selections: Dict[int, Dict[int, int]] = {}
+            for acc in bops.scan.accesses:
+                sel = acc.selection_map(enc)
+                if sel:
+                    selections[len(gj_atoms)] = sel
+                gj_atoms.append((self.catalog.reordered(acc.rel, acc.perm),
+                                 acc.vars))
+            joins.append(GenericJoin(
+                gj_atoms, bops.scan.var_order,
+                bops.materialize.output_vars, semiring=lplan.semiring,
+                selections=selections, backend=self.backend,
+                hints=bops.hints()))
+        results = run_batched(joins)
+        if results is None:
+            return None
+        return [QueryResult.from_gj(
+            apply_expr(lplan, res, self.catalog.scalars))
+            for res in results]
+
+    def _eval_rule(self, rule: Rule, materialize: bool,
+                   encode=None) -> QueryResult:
+        agg = rule.agg
+        if agg is not None and agg.op == "count" and agg.arg != "*":
+            res = self._eval_count_distinct(rule, agg, encode=encode)
         else:
             plan = self._compile(rule)
-            res = QueryResult.from_gj(self._execute(plan))
+            res = QueryResult.from_gj(self._execute(plan, encode=encode))
         if materialize:
             self._materialize_head(rule, res)
         return res
 
-    def _eval_count_distinct(self, rule: Rule, agg: AggRef) -> QueryResult:
+    def _eval_count_distinct(self, rule: Rule, agg: AggRef,
+                             encode=None) -> QueryResult:
         """COUNT(v) = number of DISTINCT v per output group: evaluate the
         body with output keyvars+{v} under set semantics, then group-count."""
         ext_out = tuple(rule.head.keyvars) + ((agg.arg,)
@@ -416,7 +563,7 @@ class Engine:
             head=dataclasses.replace(rule.head, keyvars=ext_out),
             agg_expr=None)
         plan = self._compile(sub)
-        res = self._execute(plan)
+        res = self._execute(plan, encode=encode)
         keyvars = tuple(rule.head.keyvars)
         if not keyvars:
             count = np.asarray(res.num_rows, dtype=np.int64)

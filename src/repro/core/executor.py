@@ -250,7 +250,13 @@ class Executor:
 
     # ------------------------------------------------------------ internals
     def _reuse_key(self, mat) -> Tuple:
+        # Parameterized rules (Engine.prepare) share one reuse_struct
+        # across bindings — Param slots, not values, live in the dedup
+        # key — so the binding itself must join the runtime key or
+        # binding A's cached rows would answer binding B. Unparameterized
+        # encodes carry no binding_key and contribute ().
         return (mat.reuse_struct,
+                getattr(self.encode, "binding_key", ()),
                 self.catalog.version_key(mat.reuse_rels))
 
     def _run_bag(self, bops, results: Dict[int, GJResult],

@@ -557,10 +557,13 @@ def _resolved_struct(dedup_key: Tuple, resolve) -> Tuple:
     of the same relation (Barbell's R,S,T vs R2,S2,T2, all = Edge) share
     one engine-lifetime cache entry."""
     atom_keys, out_key, sr_key, child_keys = dedup_key
-    atom_keys = tuple(sorted((resolve(rel), cols)
-                             for rel, cols in atom_keys))
-    child_keys = tuple(sorted(_resolved_struct(c, resolve)
-                              for c in child_keys))
+    # key=repr: column keys mix canonical ints with ("$", const) selection
+    # markers, which Python refuses to order when two atoms tie on the
+    # resolved relation name — repr gives a deterministic total order
+    atom_keys = tuple(sorted(((resolve(rel), cols)
+                              for rel, cols in atom_keys), key=repr))
+    child_keys = tuple(sorted((_resolved_struct(c, resolve)
+                               for c in child_keys), key=repr))
     return (atom_keys, out_key, sr_key, child_keys)
 
 

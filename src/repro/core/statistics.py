@@ -329,6 +329,16 @@ def frontier_capacity(est_cap: Optional[float], cross_bound: int,
     return bucket
 
 
+def max_batch(cap_rows: int,
+              max_buffer: int = PIPELINE_MAX_BUFFER) -> int:
+    """How many same-shape query instances one vmapped bag launch may
+    carry: the batched pipeline allocates every frontier buffer B times
+    (leading batch axis), so B is sized to keep the LARGEST per-query
+    buffer within the same total-row budget the single-query pipeline
+    enforces.  Bigger batches split into consecutive launches."""
+    return max(1, int(max_buffer) // max(int(cap_rows), 1))
+
+
 def buffer_cost(cap: float) -> float:
     """Modelled cost of one extension's static frontier buffer: every
     slot is zeroed/scattered whether or not a row lands in it, so the

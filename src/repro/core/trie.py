@@ -263,6 +263,37 @@ class Trie:
             total += self.annotation.nbytes
         return total
 
+    # ------------------------------------------------------- device residency
+    @property
+    def device_resident(self) -> bool:
+        """True if ANY level array (or the annotation) currently holds a
+        device-resident cached copy — the multi-tenant graph store's
+        eviction accounting reads this."""
+        if self.__dict__.get("_dev_annotation") is not None:
+            return True
+        return any(lv.__dict__.get("_dev_values") is not None
+                   or lv.__dict__.get("_dev_offsets") is not None
+                   for lv in self.levels)
+
+    def evict_device(self) -> int:
+        """Drop every device-resident cached copy this trie holds.
+
+        Host arrays are untouched; the next query touching the trie
+        re-uploads on demand through the identity-keyed caches
+        (``upload.levels`` counts it).  Returns the number of cache
+        entries dropped — the serve layer's LRU eviction
+        (``serve.query.GraphStore``) calls this on the coldest tenant
+        when the resident-byte budget is exceeded.
+        """
+        dropped = 0
+        for lv in self.levels:
+            for key in ("_dev_values", "_dev_offsets"):
+                if lv.__dict__.pop(key, None) is not None:
+                    dropped += 1
+        if self.__dict__.pop("_dev_annotation", None) is not None:
+            dropped += 1
+        return dropped
+
 
 def _parent_of(offsets: np.ndarray, child_idx: np.ndarray) -> np.ndarray:
     """For CSR ``offsets``, the parent id of each child index."""

@@ -1,1 +1,28 @@
-from repro.serve.engine import ServeEngine, make_decode_fn, make_prefill_fn  # noqa: F401
+"""Serving layer — two distinct entry points:
+
+* :class:`repro.serve.engine.ServeEngine` — **models**: slot-based
+  batched token serving through jitted prefill/decode step factories
+  (``make_prefill_fn`` / ``make_decode_fn``).
+* :class:`repro.serve.query.QueryServer` — **relational**: parameterized
+  datalog queries over :class:`repro.core.engine.Engine` with cached
+  physical plans, fused vmapped batch execution, and a multi-tenant
+  :class:`repro.serve.query.GraphStore` with LRU device-cache eviction.
+
+``ServeEngine`` is imported lazily: the relational server must work
+without the models stack (and without pulling jax in at import time).
+"""
+from repro.serve.query import GraphStore, QueryServer, Ticket  # noqa: F401
+
+__all__ = ["GraphStore", "QueryServer", "Ticket",
+           "ServeEngine", "make_decode_fn", "make_prefill_fn",
+           "batched_scores"]
+
+_ENGINE_EXPORTS = ("ServeEngine", "make_decode_fn", "make_prefill_fn",
+                   "batched_scores")
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from repro.serve import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,5 +1,12 @@
-"""Serving layer: jitted prefill/decode step factories + a batched request
-engine (continuous batching lite: fixed batch slots, per-slot lengths).
+"""Model serving: jitted prefill/decode step factories + a batched token
+request engine (continuous batching lite: fixed batch slots, per-slot
+lengths).
+
+This is the MODELS half of the serve package — :class:`ServeEngine`
+batches token-generation requests against transformer weights.  The
+RELATIONAL half, serving datalog queries over graph catalogs with
+parameterized plans and fused batch execution, is its sibling
+:class:`repro.serve.query.QueryServer`.
 """
 from __future__ import annotations
 

@@ -1,0 +1,254 @@
+"""Relational query serving: parameterized plans, batched execution,
+multi-tenant graph store.
+
+The models half of the serve package (``serve.engine.ServeEngine``)
+batches token requests through jitted prefill/decode steps.  This module
+is its relational analog over :class:`repro.core.engine.Engine`:
+
+  * **Parameterized queries** — ``QueryServer.prepare`` compiles a rule
+    ONCE with its selection constants rewritten into bind slots
+    (``compile.parameterize``); re-binding reuses the cached logical
+    plan, plan-search decision, physical plan + emitted source, and the
+    backend's traced bag programs.  Zero plan searches and zero retraces
+    per re-bind — the ``compile.*`` counters and
+    ``backend.trace_count()`` prove it.
+  * **Batched execution** — ``submit`` + ``drain`` group admitted
+    requests by prepared query and execute each group through
+    ``PreparedQuery.run_batch``: B same-shape probes become ONE fused
+    vmapped device launch per ``statistics.max_batch`` chunk
+    (``pipeline.batched_launches``), with the sequential per-binding
+    loop as the exact-parity fallback on host backends or non-batchable
+    plan shapes.
+  * **Multi-tenant graph store** — several graphs resident at once, one
+    ``Engine`` (catalog + plan caches) per tenant over ONE shared
+    backend, with LRU eviction over the trie device-upload cache: when
+    the resident-byte budget (or graph count) is exceeded, the coldest
+    tenant's tries drop their device-resident copies
+    (``Trie.evict_device``).  Eviction is a cache policy, not data
+    loss — the host tries stay loaded and re-upload lazily on the
+    tenant's next query.
+
+Per-tenant dispatch counters (``tenant.<t>.queries`` / ``.batches`` /
+``.evictions``) and store-wide counters (``store.evictions``,
+``queue.admitted`` / ``queue.drained``) live in ``QueryServer.counters``;
+``benchmarks/serve_bench.py`` gates on them in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.backend import ExecBackend, make_backend
+from repro.core.engine import Engine, PreparedQuery, QueryResult
+from repro.core.trie import Trie
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Admission handle for one submitted query: filled by ``drain``."""
+
+    tenant: str
+    params: Tuple[object, ...]
+    result: Optional[QueryResult] = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: Ticket
+    prepared: PreparedQuery
+
+
+class GraphStore:
+    """LRU residency manager over the tries of several tenant graphs.
+
+    Tracks which tenant was queried least recently and, when the
+    device-resident byte budget (``capacity_bytes``) or the resident
+    graph count (``max_graphs``) is exceeded, evicts the coldest
+    tenant's device caches via :meth:`repro.core.trie.Trie.evict_device`.
+    The most recently touched tenant is never evicted.
+    """
+
+    def __init__(self, capacity_bytes: Optional[int] = None,
+                 max_graphs: Optional[int] = None):
+        self.capacity_bytes = capacity_bytes
+        self.max_graphs = max_graphs
+        # tenant -> registered tries, in LRU order (first = coldest)
+        self._tries: "OrderedDict[str, List[Trie]]" = OrderedDict()
+        self.evictions = 0
+
+    def register(self, tenant: str, trie: Trie) -> None:
+        self._tries.setdefault(tenant, []).append(trie)
+        self.touch(tenant)
+
+    def touch(self, tenant: str) -> None:
+        if tenant in self._tries:
+            self._tries.move_to_end(tenant)
+
+    def tenants(self) -> List[str]:
+        """Tenants in LRU order (coldest first)."""
+        return list(self._tries)
+
+    def resident(self, tenant: str) -> bool:
+        return any(t.device_resident for t in self._tries.get(tenant, ()))
+
+    def resident_bytes(self) -> int:
+        return sum(t.nbytes() for ts in self._tries.values()
+                   for t in ts if t.device_resident)
+
+    def _resident_tenants(self) -> List[str]:
+        return [t for t in self._tries if self.resident(t)]
+
+    def _over_budget(self) -> bool:
+        if self.max_graphs is not None \
+                and len(self._resident_tenants()) > self.max_graphs:
+            return True
+        return self.capacity_bytes is not None \
+            and self.resident_bytes() > self.capacity_bytes
+
+    def enforce(self) -> List[str]:
+        """Evict coldest-first until within budget; returns the evicted
+        tenants.  The warmest resident tenant always survives (evicting
+        the graph that was just queried would thrash)."""
+        evicted: List[str] = []
+        while self._over_budget():
+            resident = self._resident_tenants()
+            if len(resident) <= 1:
+                break
+            cold = resident[0]
+            for t in self._tries[cold]:
+                t.evict_device()
+            self.evictions += 1
+            evicted.append(cold)
+        return evicted
+
+
+class QueryServer:
+    """Serve relational queries for several tenant graphs.
+
+    One :class:`~repro.core.engine.Engine` per tenant (separate catalogs
+    and plan caches — tenants cannot read each other's relations) over
+    ONE shared backend (shared kernel dispatch, traced-program cache,
+    and counters).  ``prepare``/``run`` serve point queries with
+    bind-parameter plan reuse; ``submit``/``drain`` run an admission
+    queue whose per-prepared-query groups execute as fused batches.
+    """
+
+    def __init__(self, backend=None, capacity_bytes: Optional[int] = None,
+                 max_graphs: Optional[int] = None, **engine_opts):
+        self.backend: ExecBackend = make_backend(backend)
+        self.store = GraphStore(capacity_bytes=capacity_bytes,
+                                max_graphs=max_graphs)
+        self._engine_opts = dict(engine_opts)
+        self._engines: Dict[str, Engine] = {}
+        self._prepared: Dict[Tuple[str, str], PreparedQuery] = {}
+        self._queue: List[_Pending] = []
+        self.counters: Dict[str, int] = {}
+
+    # ------------------------------------------------------------- tenants
+    def _bump(self, key: str, n: int = 1) -> None:
+        self.counters[key] = self.counters.get(key, 0) + n
+
+    def engine(self, tenant: str) -> Engine:
+        eng = self._engines.get(tenant)
+        if eng is None:
+            eng = Engine(backend=self.backend, **self._engine_opts)
+            self._engines[tenant] = eng
+        return eng
+
+    def load_graph(self, tenant: str, name: str, src, dst,
+                   annotation=None) -> Trie:
+        t = self.engine(tenant).load_edges(name, src, dst,
+                                           annotation=annotation)
+        self.store.register(tenant, t)
+        self._evict_over_budget()
+        return t
+
+    def load_table(self, tenant: str, name: str, columns,
+                   annotation=None) -> Trie:
+        t = self.engine(tenant).load_table(name, columns,
+                                           annotation=annotation)
+        self.store.register(tenant, t)
+        self._evict_over_budget()
+        return t
+
+    def alias(self, tenant: str, name: str, target: str) -> None:
+        self.engine(tenant).alias(name, target)
+
+    def _evict_over_budget(self) -> None:
+        for cold in self.store.enforce():
+            self._bump(f"tenant.{cold}.evictions")
+            self._bump("store.evictions")
+
+    # ------------------------------------------------------------- queries
+    def prepare(self, tenant: str, text: str) -> PreparedQuery:
+        key = (tenant, text)
+        pq = self._prepared.get(key)
+        if pq is None:
+            pq = self.engine(tenant).prepare(text)
+            self._prepared[key] = pq
+        return pq
+
+    def run(self, tenant: str, text: str, *params) -> QueryResult:
+        """Point query through the prepared-plan cache: the first call
+        per (tenant, text) compiles; every later call only re-binds."""
+        pq = self.prepare(tenant, text)
+        self.store.touch(tenant)
+        res = pq.run(*params)
+        self._bump(f"tenant.{tenant}.queries")
+        self._evict_over_budget()
+        return res
+
+    def query(self, tenant: str, text: str) -> QueryResult:
+        """Unparameterized passthrough (multi-rule programs, recursion)."""
+        self.store.touch(tenant)
+        res = self.engine(tenant).query(text)
+        self._bump(f"tenant.{tenant}.queries")
+        self._evict_over_budget()
+        return res
+
+    # ---------------------------------------------------- admission queue
+    def submit(self, tenant: str, text: str, *params) -> Ticket:
+        """Admit one query; execution is deferred to :meth:`drain` so
+        same-shape requests can share a fused batched launch."""
+        pq = self.prepare(tenant, text)
+        ticket = Ticket(tenant=tenant, params=pq._binding(params))
+        self._queue.append(_Pending(ticket=ticket, prepared=pq))
+        self._bump("queue.admitted")
+        return ticket
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def drain(self) -> List[Ticket]:
+        """Execute every admitted request, grouped by prepared query:
+        each group runs through ``PreparedQuery.run_batch`` (one fused
+        launch per same-shape chunk on the device backend, sequential
+        parity loop elsewhere).  Tickets are filled in admission order."""
+        queue, self._queue = self._queue, []
+        groups: "OrderedDict[int, List[_Pending]]" = OrderedDict()
+        for p in queue:
+            groups.setdefault(id(p.prepared), []).append(p)
+        for members in groups.values():
+            pq = members[0].prepared
+            tenant = members[0].ticket.tenant
+            self.store.touch(tenant)
+            results = pq.run_batch([p.ticket.params for p in members])
+            for p, res in zip(members, results):
+                p.ticket.result = res
+                p.ticket.done = True
+            self._bump(f"tenant.{tenant}.queries", len(members))
+            if len(members) > 1:
+                self._bump(f"tenant.{tenant}.batches")
+            self._evict_over_budget()
+        self._bump("queue.drained", len(queue))
+        return [p.ticket for p in queue]
+
+    # ------------------------------------------------------------- stats
+    def dispatch_summary(self) -> Dict[str, int]:
+        """Shared-backend dispatch counters merged with the server's
+        per-tenant and queue counters."""
+        out = dict(self.backend.dispatch_summary())
+        out.update(self.counters)
+        return out

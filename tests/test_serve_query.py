@@ -1,0 +1,317 @@
+"""Query serving layer: parameterized plans, batched execution, graph store.
+
+Three invariant families from the serving PR:
+
+  * **No recompile on re-bind** — a prepared query re-bound to a new
+    constant performs ZERO plan searches, logical compiles, physical
+    builds, and device retraces; the ``compile.*`` counters and
+    ``backend.trace_count()`` prove it (not timing).
+  * **Batched == sequential, exactly** — ``run_batch`` over B bindings
+    returns bit-identical results to the per-binding loop on every
+    parameterized paper pattern query, on both backends; on the device
+    backend a same-shape batch is ONE fused launch
+    (``pipeline.batched_launches``).
+  * **LRU eviction** — a graph store holding more tenants than its
+    residency budget evicts the coldest tenant's device caches (and only
+    those); the evicted tenant keeps answering correctly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis.plan_verify import verify_physical_plan
+from repro.core.datalog import Param
+from repro.core.engine import Engine
+from repro.serve import QueryServer
+
+from conftest import random_undirected_graph
+
+BACKENDS = ("numpy", "device")
+
+# Parameterized variants of the paper's Table 2 pattern queries: the same
+# join shapes, anchored at a bind-parameter vertex (the serving workload —
+# "triangles through v", "cliques through v", ...).
+PARAM_QUERIES = [
+    ("triangle_at",
+     "C(;w:long) :- R(0,y),S(y,z),T(0,z); w=<<COUNT(*)>>."),
+    ("triangle_list_at",
+     "L(y,z) :- R(0,y),S(y,z),T(0,z)."),
+    ("4clique_at",
+     "C(;w:long) :- R(0,y),S(y,z),T(0,z),U(0,a),X(y,a),Y(z,a); "
+     "w=<<COUNT(*)>>."),
+    ("lollipop_at",
+     "C(;w:long) :- R(0,y),S(y,z),T(0,z),U(0,a); w=<<COUNT(*)>>."),
+    ("barbell_at",
+     "C(;w:long) :- R(0,y),S(y,z),T(0,z),U(0,a),R2(a,b),S2(b,c),T2(a,c); "
+     "w=<<COUNT(*)>>."),
+]
+ALIASES = ("S", "T", "U", "X", "Y", "R2", "S2", "T2")
+
+
+def make_engine(backend, n=24, p=0.3, seed=0) -> Engine:
+    src, dst, _ = random_undirected_graph(n, p, seed=seed)
+    eng = Engine(backend=backend)
+    eng.load_edges("R", src, dst)
+    for al in ALIASES:
+        eng.alias(al, "R")
+    return eng
+
+
+def assert_same_result(a, b):
+    """Exact equality — the batched path must be bit-identical to the
+    sequential oracle (jnp reference fill, per the kernel contract)."""
+    assert a.vars == b.vars
+    for v in a.vars:
+        np.testing.assert_array_equal(np.asarray(a.columns[v]),
+                                      np.asarray(b.columns[v]))
+    if b.annotation is None:
+        assert a.annotation is None
+    else:
+        np.testing.assert_array_equal(np.asarray(a.annotation),
+                                      np.asarray(b.annotation))
+
+
+# ------------------------------------------------------- plan-cache reuse
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rebind_zero_recompile_zero_retrace(backend):
+    eng = make_engine(backend)
+    pq = eng.prepare(PARAM_QUERIES[0][1])
+    assert pq.n_params == 1
+    pq.run(1)  # first execution: plans, emits, traces
+
+    stats = eng.backend.stats
+    before = dict(stats)
+    traces_before = eng.backend.trace_count()
+    for v in (2, 3, 5, 2):
+        pq.run(v)
+    # re-binding reuses every compile-side cache: zero plan searches,
+    # zero logical/physical builds, zero new device traces
+    def delta(key):
+        return stats.get(key, 0) - before.get(key, 0)
+
+    assert delta("compile.plan_searches") == 0
+    assert delta("compile.logical_compiles") == 0
+    assert delta("compile.physical_builds") == 0
+    assert eng.backend.trace_count() == traces_before
+    # and the hits prove the caches were consulted, not bypassed
+    assert delta("compile.plan_cache_hits") >= 4
+    assert delta("compile.physical_cache_hits") >= 4
+
+
+def test_rebind_correctness_vs_inline_constant():
+    eng = make_engine("numpy")
+    pq = eng.prepare(PARAM_QUERIES[0][1])
+    for v in (0, 1, 7):
+        got = int(np.asarray(pq.run(v).scalar()))
+        oracle = eng.query(
+            f"O(;w:long) :- R({v},y),S(y,z),T({v},z); w=<<COUNT(*)>>.")
+        assert got == int(np.asarray(oracle.scalar()))
+
+
+def test_prepare_binds_distinct_constants_separately():
+    eng = make_engine("numpy")
+    pq = eng.prepare("P(y) :- R(0,y),S(1,y).")
+    assert pq.n_params == 2  # two distinct literals -> two slots
+    res = pq.run(2, 3)
+    oracle = eng.query("O(y) :- R(2,y),S(3,y).")
+    assert_same_result(res, oracle)
+    # defaults re-run the source text's own constants
+    assert_same_result(pq.run(), eng.query("O(y) :- R(0,y),S(1,y)."))
+
+
+def test_bag_cache_is_binding_aware():
+    """Binding A's cached bag rows must never answer binding B."""
+    eng = make_engine("numpy")
+    pq = eng.prepare(PARAM_QUERIES[0][1])
+    a = int(np.asarray(pq.run(1).scalar()))
+    b = int(np.asarray(pq.run(2).scalar()))
+    a2 = int(np.asarray(pq.run(1).scalar()))
+    oracle = eng.query("O(;w:long) :- R(2,y),S(y,z),T(2,z); w=<<COUNT(*)>>.")
+    assert a == a2
+    assert b == int(np.asarray(oracle.scalar()))
+
+
+# ------------------------------------------------- batched vs sequential
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("qname,query", PARAM_QUERIES,
+                         ids=[n for n, _ in PARAM_QUERIES])
+def test_batched_exact_parity(backend, qname, query):
+    eng = make_engine(backend)
+    pq = eng.prepare(query)
+    bindings = [0, 1, 2, 5, 1]
+    batched = pq.run_batch(bindings)
+    sequential = [pq.run(b) for b in bindings]
+    assert len(batched) == len(bindings)
+    for got, want in zip(batched, sequential):
+        assert_same_result(got, want)
+
+
+def test_batched_with_missing_vertex_parity():
+    """A binding with no matching tuples degenerates out of the modal
+    batch signature and must still return the right (empty) answer."""
+    eng = make_engine("numpy")
+    pq = eng.prepare(PARAM_QUERIES[0][1])
+    bindings = [1, 10_000, 2]  # 10_000 is not a vertex
+    batched = pq.run_batch(bindings)
+    for got, want in zip(batched, [pq.run(b) for b in bindings]):
+        assert_same_result(got, want)
+    assert int(np.asarray(batched[1].scalar())) == 0
+
+
+def test_batch_is_one_fused_launch_on_device():
+    eng = make_engine("device")
+    pq = eng.prepare(PARAM_QUERIES[0][1])
+    pq.run(0)  # warm: plan + trace
+    stats = eng.backend.stats
+    if not (getattr(eng.backend, "pipeline_enabled", False)
+            and getattr(eng.backend, "fuse_bags", False)):
+        pytest.skip("device pipeline/fusion disabled by env")
+    before = dict(stats)
+    bindings = [0, 1, 2, 3]
+    pq.run_batch(bindings)
+    delta = {k: stats.get(k, 0) - before.get(k, 0) for k in stats}
+    assert delta["pipeline.batched_launches"] == 1
+    assert delta["pipeline.batched_queries"] == len(bindings)
+    # one fused launch = one closing sync for the whole batch
+    assert delta["extend.closing_syncs"] == 1
+
+
+# -------------------------------------------------------- query server
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_query_server_drain_parity(backend):
+    srv = QueryServer(backend=backend)
+    src, dst, _ = random_undirected_graph(24, 0.3, seed=1)
+    srv.load_graph("acme", "R", src, dst)
+    for al in ALIASES:
+        srv.alias("acme", al, "R")
+    q = PARAM_QUERIES[0][1]
+    tickets = [srv.submit("acme", q, v) for v in (0, 1, 2, 3)]
+    assert srv.pending() == 4
+    srv.drain()
+    assert srv.pending() == 0
+    pq = srv.prepare("acme", q)
+    for t, v in zip(tickets, (0, 1, 2, 3)):
+        assert t.done
+        assert_same_result(t.result, pq.run(v))
+    assert srv.counters["tenant.acme.queries"] == 4
+    assert srv.counters["tenant.acme.batches"] == 1
+    assert srv.counters["queue.admitted"] == 4
+    assert srv.counters["queue.drained"] == 4
+
+
+def test_query_server_tenant_isolation():
+    srv = QueryServer(backend="numpy")
+    srv.load_graph("a", "R", np.array([0, 1]), np.array([1, 2]))
+    srv.load_graph("b", "R", np.array([5, 6]), np.array([6, 7]))
+    ra = srv.run("a", "P(x,y) :- R(x,y).")
+    rb = srv.run("b", "P(x,y) :- R(x,y).")
+    assert set(ra.columns["x"].tolist()) == {0, 1}
+    assert set(rb.columns["x"].tolist()) == {5, 6}
+    # one shared backend instance across tenants
+    assert srv.engine("a").backend is srv.engine("b").backend
+
+
+# ------------------------------------------------------------- eviction
+def _force_resident(srv, tenant, name="R"):
+    """Backend-agnostic device-cache fill: the upload function is
+    identity-cached, so np.asarray stands in for jnp.asarray here."""
+    t = srv.engine(tenant).catalog.get(name)
+    for lv in t.levels:
+        lv.device_values(np.asarray)
+        lv.device_offsets(np.asarray)
+    return t
+
+
+def test_graph_store_lru_eviction_three_graphs_capacity_two():
+    srv = QueryServer(backend="numpy", max_graphs=2)
+    for tenant, seed in (("a", 0), ("b", 1), ("c", 2)):
+        src, dst, _ = random_undirected_graph(16, 0.3, seed=seed)
+        srv.load_graph(tenant, "R", src, dst)
+        _force_resident(srv, tenant)
+    # LRU order is load order: a coldest. Touch a so b becomes coldest.
+    srv.run("a", "P(x,y) :- R(x,y).")
+    srv._evict_over_budget()
+    store = srv.store
+    assert not store.resident("b")
+    assert store.resident("a") and store.resident("c")
+    assert srv.counters["store.evictions"] == 1
+    assert srv.counters["tenant.b.evictions"] == 1
+    # eviction drops device caches only — the evicted tenant still answers
+    res = srv.run("b", "P(x,y) :- R(x,y).")
+    assert res.num_rows == srv.engine("b").catalog.get("R").num_tuples
+
+
+def test_graph_store_byte_budget_eviction():
+    srv = QueryServer(backend="numpy", capacity_bytes=1)
+    for tenant, seed in (("a", 0), ("b", 1)):
+        src, dst, _ = random_undirected_graph(16, 0.3, seed=seed)
+        srv.load_graph(tenant, "R", src, dst)
+        _force_resident(srv, tenant)
+    srv._evict_over_budget()
+    # over a 1-byte budget only the warmest survives (never evicted)
+    assert not srv.store.resident("a")
+    assert srv.store.resident("b")
+
+
+def test_graph_store_never_evicts_last_resident():
+    srv = QueryServer(backend="numpy", capacity_bytes=1)
+    src, dst, _ = random_undirected_graph(16, 0.3, seed=0)
+    srv.load_graph("only", "R", src, dst)
+    _force_resident(srv, "only")
+    srv._evict_over_budget()
+    assert srv.store.resident("only")
+    assert srv.counters.get("store.evictions", 0) == 0
+
+
+def test_trie_evict_device_counts_and_clears():
+    srv = QueryServer(backend="numpy")
+    src, dst, _ = random_undirected_graph(16, 0.3, seed=0)
+    t = srv.load_graph("a", "R", src, dst)
+    assert not t.device_resident
+    _force_resident(srv, "a")
+    assert t.device_resident
+    dropped = t.evict_device()
+    assert dropped == 2 * len(t.levels)
+    assert not t.device_resident
+    assert t.evict_device() == 0  # idempotent
+
+
+# ------------------------------------------------------ verifier check
+def test_plan_verifier_accepts_prepared_plan():
+    eng = make_engine("numpy")
+    pq = eng.prepare(PARAM_QUERIES[0][1])
+    pq.run(1)
+    pplan = eng.last_physical
+    bad = [v for v in verify_physical_plan(pplan, eng.catalog)
+           if v.code == "param-selection"]
+    assert bad == []
+
+
+def test_plan_verifier_flags_bad_param_slots():
+    eng = make_engine("numpy")
+    pq = eng.prepare(PARAM_QUERIES[0][1])
+    pq.run(1)
+    pplan = eng.last_physical
+    scan = pplan.bag_ops[0].scan
+
+    def with_slot(slot):
+        accesses = []
+        for acc in scan.accesses:
+            if acc.selections:
+                acc = dataclasses.replace(
+                    acc, selections=tuple((p, Param(slot))
+                                          for p, _ in acc.selections))
+            accesses.append(acc)
+        return accesses
+
+    orig = scan.accesses
+    try:
+        scan.accesses = with_slot(-1)  # negative slot
+        codes = [v.code for v in verify_physical_plan(pplan, eng.catalog)]
+        assert "param-selection" in codes
+        scan.accesses = with_slot(3)   # gap: slots {3} without 0..2
+        codes = [v.code for v in verify_physical_plan(pplan, eng.catalog)]
+        assert "param-selection" in codes
+    finally:
+        scan.accesses = orig
