@@ -116,6 +116,19 @@ def run_suite(smoke: bool) -> list:
                  for k in GATED_COUNTERS}
         retraces = srv.backend.trace_count() - traces_before
 
+        # ---- static-vs-measured HBM: the memory_budget model against
+        # the live device caches, per tenant (zeros on the numpy leg —
+        # nothing is device-resident there).  Drift past the model
+        # tolerance is a gate failure, same as parity.
+        from repro.analysis.memory_budget import (MemoryBudgetError,
+                                                  check_store)
+        try:
+            hbm = check_store(srv)
+            hbm_ok = True
+        except MemoryBudgetError as e:
+            hbm = {"error": str(e)}
+            hbm_ok = False
+
         out.append({
             "backend": backend,
             "n_queries": n_point,
@@ -129,6 +142,8 @@ def run_suite(smoke: bool) -> list:
             "batched_speedup": seq_wall / max(batched_wall, 1e-9),
             "parity": bool(parity),
             "retraces": int(retraces),
+            "hbm": hbm,
+            "hbm_ok": bool(hbm_ok),
             "dispatch": delta,
             "counters": {k: int(v)
                          for k, v in sorted(srv.counters.items())},
@@ -230,6 +245,18 @@ def main() -> None:
     if bad:
         print(f"# SERVE PARITY FAILURES: {[r['backend'] for r in bad]}")
         sys.exit(1)
+    drifted = [r for r in suite if not r["hbm_ok"]]
+    if drifted:
+        print("# HBM MODEL DRIFT (static footprint model vs live device "
+              "caches):")
+        for r in drifted:
+            print(f"#   {r['backend']}: {r['hbm'].get('error')}")
+        sys.exit(1)
+    for r in suite:
+        for tenant, h in sorted(r["hbm"].items()):
+            print(f"# hbm[{r['backend']}/{tenant}]: "
+                  f"model={h['model_bytes']}B live={h['live_bytes']}B "
+                  f"delta={h['delta_bytes']}B")
     recompiles = [r for r in suite
                   if any(r["dispatch"].get(k, 0)
                          for k in ("compile.plan_searches",

@@ -1,4 +1,4 @@
-"""Static verification layer (three passes, run before/around execution).
+"""Static verification layer (six passes, run before/around execution).
 
 EmptyHeaded's bet is that a high-level query compiles into provably
 correct low-level plans; this package makes the "provably" part checkable
@@ -19,9 +19,27 @@ instead of vibes:
     checker (BlockSpec/grid/out_shape/dtype vs the ``ref.py`` oracle,
     index-map bounds), plus the ``REPRO_SANITIZE=1`` runtime dispatch
     assertions consumed by ``Engine``.
+  * :mod:`repro.analysis.jaxpr_audit` — trace-level auditor: retraces
+    every recorded bag program / batched program / device fixpoint to
+    its jaxpr and proves zero host-callback primitives, a while-loop
+    count matching the launch budget, frontier buffers exactly at the
+    plan-declared pow2 capacities, no 64-bit dtype widening and no
+    oversized broadcast materialization; ratcheted against
+    ``jaxpr_baseline.json``.
+  * :mod:`repro.analysis.memory_budget` — static HBM footprint model
+    (trie level uploads + bitset block directories + frontier buffers ×
+    batch + fixpoint state) cross-checked against the live device
+    caches without a single transfer; ``serve.GraphStore`` budgets
+    eviction on its model bytes.
+  * :mod:`repro.analysis.concurrency_lint` — AST lock-discipline
+    checker over the serving layer and the engine/backend shared state;
+    defines the ``@guarded_by`` convention and keeps ``serve/``
+    lock-clean (core findings accounted in
+    ``concurrency_baseline.json``).
 """
 from __future__ import annotations
 
+from repro.analysis.concurrency_lint import guarded_by
 from repro.analysis.plan_verify import (PlanVerificationError, PlanViolation,
                                         assert_valid, verify_physical_plan)
 
@@ -29,5 +47,6 @@ __all__ = [
     "PlanVerificationError",
     "PlanViolation",
     "assert_valid",
+    "guarded_by",
     "verify_physical_plan",
 ]

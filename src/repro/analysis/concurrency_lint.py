@@ -1,0 +1,354 @@
+"""Serving-layer concurrency lint: AST lock-discipline checker.
+
+``serve.QueryServer`` is the one place the engine meets threads: an
+admission queue appended from request handlers, per-tenant engines
+created on first touch, LRU order mutated on every query, and dispatch
+counters bumped from every path.  None of that is protected by types —
+a missing ``with self._lock:`` is invisible until two drains interleave.
+This pass makes the lock discipline a static property, the same way
+``sync_lint`` does for host syncs:
+
+  * **shared-state registry** — :data:`SHARED_STATE` names, per scanned
+    file and class, the attributes that are mutated after construction
+    and may be touched from multiple threads (the serve queue/LRU/
+    counters, the engine plan caches, the backend dispatch counters);
+    :data:`SHARED_OBJECT_ATTRS` additionally names the identity-keyed
+    device-upload caches written onto trie/bitset instances from the
+    backend.
+  * **unguarded-write / unguarded-rmw** — an assignment (or an
+    in-place read-modify-write: ``+=``, ``.append``, ``.setdefault``,
+    ``.move_to_end``, ``.pop``, subscript stores …) to a registered
+    attribute, outside ``__init__``, is a finding unless the statement
+    sits under ``with self.<lock>:`` (any attribute ending ``_lock``)
+    or the enclosing method is declared :func:`guarded_by` that lock.
+  * **unheld-guard-call** — calling a ``@guarded_by``-declared method
+    of the same class from a context that provably does not hold the
+    declared lock.
+
+``@guarded_by("_lock")`` is the written half of the convention (see
+CONTRIBUTING.md): it marks a method whose CALLERS must hold the lock.
+The decorator is a no-op at run time — it exists so the discipline is
+declared next to the code and machine-checked here.
+
+Scope and policy mirror ``sync_lint``: findings in ``serve/`` are
+**never baselinable** — the serving layer is the threaded surface and
+must stay lock-clean; findings in the single-threaded core (engine plan
+caches, backend counters and upload caches — serialized per instance by
+the server's lock, see the class docstrings) are *accounted* in the
+committed ``concurrency_baseline.json`` and ratcheted in both
+directions.  CLI::
+
+    PYTHONPATH=src python -m repro.analysis.concurrency_lint
+    PYTHONPATH=src python -m repro.analysis.concurrency_lint --write-baseline
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import sys
+
+_REPRO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+DEFAULT_BASELINE = pathlib.Path(__file__).with_name(
+    "concurrency_baseline.json")
+
+# file (posix, relative to src/repro) -> class -> shared instance attrs.
+# Only attrs mutated AFTER construction matter; __init__ is exempt.
+SHARED_STATE: dict[str, dict[str, set]] = {
+    "serve/query.py": {
+        "GraphStore": {"_tries", "evictions"},
+        "QueryServer": {"counters", "_queue", "_engines", "_prepared"},
+    },
+    "core/engine.py": {
+        "Engine": {"_plan_cache", "_search_cache", "_physical_cache"},
+    },
+    "core/backend.py": {
+        "DeviceBackend": {"stats"},
+        "NumpyBackend": {"stats"},
+    },
+}
+
+# Identity-keyed device-upload caches written onto OTHER objects (trie
+# levels / bitsets) from the scanned files: benign-race idempotent
+# writes today, accounted in the baseline so a new cache site shows up.
+SHARED_OBJECT_ATTRS = {
+    "_dev_values", "_dev_offsets", "_dev_annotation", "_dev_sideways_cache",
+}
+
+# Method calls that read-modify-write their receiver in place.
+RMW_METHODS = {
+    "append", "extend", "insert", "pop", "popitem", "remove", "clear",
+    "setdefault", "update", "move_to_end", "add", "discard",
+}
+
+# serve/ findings are regressions by definition — never baselinable.
+STRICT_PREFIXES = ("serve/",)
+
+KINDS = ("unguarded-write", "unguarded-rmw", "unheld-guard-call")
+
+
+def guarded_by(lock_attr: str):
+    """Declare that callers of the decorated method must hold
+    ``self.<lock_attr>``.  No-op at run time; enforced statically by
+    this module's linter (kind ``unheld-guard-call``)."""
+
+    def mark(fn):
+        fn.__guarded_by__ = lock_attr
+        return fn
+
+    return mark
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    file: str
+    qualname: str
+    kind: str
+    lineno: int
+    detail: str
+
+    @property
+    def key(self) -> str:
+        # line numbers excluded: unrelated edits must not churn the
+        # baseline (same identity scheme as sync_lint)
+        return f"{self.file}::{self.qualname}::{self.kind}"
+
+    def __str__(self) -> str:
+        return (f"{self.file}:{self.lineno} [{self.kind}] "
+                f"{self.qualname}: {self.detail}")
+
+
+# --------------------------------------------------------------- helpers
+def _self_attr(node: ast.AST) -> str | None:
+    """'x' for ``self.x``, else None."""
+    if isinstance(node, ast.Attribute) \
+            and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _guard_decorator(fn: ast.AST) -> str | None:
+    """The lock name a ``@guarded_by("...")`` decorator declares."""
+    for dec in getattr(fn, "decorator_list", ()):
+        if isinstance(dec, ast.Call):
+            head = dec.func
+            name = head.attr if isinstance(head, ast.Attribute) \
+                else getattr(head, "id", None)
+            if name == "guarded_by" and dec.args \
+                    and isinstance(dec.args[0], ast.Constant):
+                return str(dec.args[0].value)
+    return None
+
+
+def _lock_of_with_item(item: ast.withitem) -> str | None:
+    """'x' when the with-item enters ``self.x`` and x looks like a lock."""
+    attr = _self_attr(item.context_expr)
+    if attr is not None and attr.endswith("_lock"):
+        return attr
+    return None
+
+
+class _MethodScan:
+    """Per-statement lock context for one method body."""
+
+    def __init__(self, fn: ast.AST):
+        self.fn = fn
+        self.declared = _guard_decorator(fn)
+        # node id -> set of self.<lock> names held at that node
+        self.held: dict[int, set] = {}
+        base = {self.declared} if self.declared else set()
+        self._walk(fn, base)
+
+    def _walk(self, node: ast.AST, held: set) -> None:
+        for child in ast.iter_child_nodes(node):
+            h = held
+            if isinstance(child, ast.With):
+                locks = {lk for it in child.items
+                         if (lk := _lock_of_with_item(it))}
+                if locks:
+                    h = held | locks
+            elif isinstance(child, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)) \
+                    and child is not self.fn:
+                # nested defs run later, under unknown locks
+                h = set()
+            self.held[id(child)] = h
+            self._walk(child, h)
+
+    def held_at(self, node: ast.AST) -> set:
+        return self.held.get(id(node), set())
+
+
+def _mutation_of(node: ast.AST):
+    """(attr, kind, lineno) when ``node`` writes through ``self.<attr>``
+    or read-modify-writes it; attr may also come back as
+    ``('obj', name)`` for SHARED_OBJECT_ATTRS stores."""
+    if isinstance(node, ast.Assign):
+        targets = []
+        for tgt in node.targets:
+            if isinstance(tgt, (ast.Tuple, ast.List)):   # a, self.b = ...
+                targets.extend(tgt.elts)
+            else:
+                targets.append(tgt)
+        for tgt in targets:
+            # self.attr = ... / self.attr[k] = ...
+            base = tgt
+            kind = "unguarded-write"
+            if isinstance(base, ast.Subscript):
+                base = base.value
+                kind = "unguarded-rmw"   # store into a shared container
+            attr = _self_attr(base)
+            if attr is not None:
+                yield attr, kind, node.lineno
+            elif isinstance(base, ast.Attribute) \
+                    and base.attr in SHARED_OBJECT_ATTRS:
+                yield ("obj", base.attr), "unguarded-write", node.lineno
+    elif isinstance(node, ast.AugAssign):
+        base = node.target
+        if isinstance(base, ast.Subscript):
+            base = base.value
+        attr = _self_attr(base)
+        if attr is not None:
+            yield attr, "unguarded-rmw", node.lineno
+    elif isinstance(node, ast.Call) \
+            and isinstance(node.func, ast.Attribute) \
+            and node.func.attr in RMW_METHODS:
+        attr = _self_attr(node.func.value)
+        if attr is not None:
+            yield attr, "unguarded-rmw", node.lineno
+
+
+# --------------------------------------------------------------- the pass
+def lint_source(source: str, file: str) -> list:
+    tree = ast.parse(source, filename=file)
+    shared_by_class = SHARED_STATE.get(file, {})
+    findings: list[Finding] = []
+
+    for cls in (n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)):
+        shared = shared_by_class.get(cls.name, set())
+        methods = [n for n in cls.body
+                   if isinstance(n, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))]
+        guarded = {m.name: _guard_decorator(m) for m in methods
+                   if _guard_decorator(m)}
+        for m in methods:
+            scan = _MethodScan(m)
+            qual = f"{cls.name}.{m.name}"
+            skip_writes = m.name == "__init__"   # construction is
+            for node in ast.walk(m):             # single-threaded
+                held = scan.held_at(node)
+                for attr, kind, lineno in _mutation_of(node):
+                    if isinstance(attr, tuple):   # object-cache store
+                        if not held:
+                            findings.append(Finding(
+                                file, qual, "unguarded-write", lineno,
+                                f"unlocked store to shared device cache "
+                                f".{attr[1]}"))
+                        continue
+                    if skip_writes or attr not in shared or held:
+                        continue
+                    findings.append(Finding(
+                        file, qual, kind, lineno,
+                        f"self.{attr} mutated without holding a lock "
+                        f"(no enclosing `with self.*_lock:` and no "
+                        f"@guarded_by on {qual})"))
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in guarded \
+                        and _self_attr(node.func) is not None:
+                    need = guarded[node.func.attr]
+                    if need not in held:
+                        findings.append(Finding(
+                            file, qual, "unheld-guard-call", node.lineno,
+                            f"calls {cls.name}.{node.func.attr} "
+                            f"(@guarded_by('{need}')) without holding "
+                            f"self.{need}"))
+    return sorted(findings, key=lambda f: (f.file, f.lineno, f.kind))
+
+
+def lint_tree(root: pathlib.Path = _REPRO_ROOT) -> list:
+    findings: list[Finding] = []
+    files = sorted(set(SHARED_STATE)
+                   | {p.relative_to(root).as_posix()
+                      for p in (root / "serve").rglob("*.py")})
+    for rel in files:
+        path = root / rel
+        if path.exists():
+            findings.extend(lint_source(path.read_text(), rel))
+    return findings
+
+
+# --------------------------------------------------------------- baseline
+def baseline_counts(findings: list) -> dict:
+    out: dict[str, int] = {}
+    for f in findings:
+        out[f.key] = out.get(f.key, 0) + 1
+    return out
+
+
+def load_baseline(path: pathlib.Path = DEFAULT_BASELINE) -> dict:
+    return {str(k): int(v)
+            for k, v in json.loads(path.read_text()).items()}
+
+
+def write_baseline(findings: list,
+                   path: pathlib.Path = DEFAULT_BASELINE) -> None:
+    counts = baseline_counts(findings)
+    path.write_text(json.dumps(dict(sorted(counts.items())), indent=2)
+                    + "\n")
+
+
+def compare(findings: list, baseline: dict) -> tuple:
+    """(new, removed) vs baseline — either non-empty fails CI."""
+    counts = baseline_counts(findings)
+    new = sorted(f"{k} (x{v - baseline.get(k, 0)})"
+                 for k, v in counts.items() if v > baseline.get(k, 0))
+    removed = sorted(f"{k} (x{v - counts.get(k, 0)})"
+                     for k, v in baseline.items() if counts.get(k, 0) < v)
+    return new, removed
+
+
+def strict_findings(findings: list) -> list:
+    return [f for f in findings if f.file.startswith(STRICT_PREFIXES)]
+
+
+def main(argv: list | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    write = "--write-baseline" in argv
+    findings = lint_tree()
+    strict = strict_findings(findings)
+    if strict:
+        print("serving-layer lock-discipline violations (never "
+              "baselinable — serve/ is the threaded surface):")
+        for f in strict:
+            print(f"  {f}")
+        return 1
+    if write:
+        write_baseline(findings)
+        print(f"wrote {DEFAULT_BASELINE.name}: {len(findings)} accounted "
+              f"single-threaded-core finding(s)")
+        return 0
+    try:
+        baseline = load_baseline()
+    except FileNotFoundError:
+        print(f"missing {DEFAULT_BASELINE}; run with --write-baseline")
+        return 1
+    new, removed = compare(findings, baseline)
+    for f in findings:
+        print(f"known: {f}")
+    if new:
+        print("NEW unguarded shared-state mutations:")
+        for k in new:
+            print(f"  + {k}")
+    if removed:
+        print("findings removed — shrink the baseline with "
+              "--write-baseline:")
+        for k in removed:
+            print(f"  - {k}")
+    return 1 if (new or removed) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

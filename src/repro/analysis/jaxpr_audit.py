@@ -1,0 +1,507 @@
+"""Trace-level program auditor: jaxpr invariants for the device engine.
+
+``plan_verify`` checks the plan IR and ``sync_lint`` checks the Python
+source, but the invariants the engine actually ships on live in the
+**traced jaxprs** — the fused bag programs (``backend._bag_program``),
+their vmapped batch counterparts, and the device fixpoints
+(``recursion._seminaive_device`` / ``_naive_device``).  This module
+retraces each recorded program to its ``ClosedJaxpr`` (abstractly — via
+``jax.make_jaxpr`` over ``ShapeDtypeStruct`` avals, no device work) and
+walks the equation graph, recursing into ``while`` / ``scan`` / ``cond``
+/ ``pjit`` sub-jaxprs, to statically prove:
+
+* **zero host callbacks** (``host-callback``) — no ``io_callback`` /
+  ``pure_callback`` / ``debug_callback`` primitive anywhere in the
+  program.  A callback inside a traced program is a hidden host
+  round-trip that no runtime counter would attribute;
+* **launch-budget consistency** (``launch-budget``) — the program
+  contains exactly the fill loops its lowered ``prog`` implies (one
+  ``lax.while_loop`` per extension, one per non-plain terminal fold,
+  one per fixpoint) and nothing else loops.  This is the static half of
+  the dynamic ``pipeline.launches == extend.closing_syncs`` budget: one
+  traced program, one launch, one closing sync;
+* **frontier buffer shapes** (``frontier-cap`` / ``frontier-bucket``) —
+  every fill loop carries buffers of exactly the plan-lowered static
+  capacity (trailing batch-free dim == ``cap_out``), and each declared
+  capacity is a valid ``statistics.frontier_capacity`` bucket (power of
+  two in ``[PIPELINE_MIN_BUCKET, PIPELINE_MAX_BUFFER]``, divisible by
+  its pow2 morsel);
+* **no dtype widening** (``dtype-widening``) — no f64 / i64 / c128 aval
+  appears unless x64 is enabled or the width was declared by a program
+  input (the catalog's annotation dtypes enter through the operand
+  avals);
+* **no broadcast materialization** (``broadcast-materialize``) — no
+  ``broadcast_in_dim`` materializes more elements than the pipeline's
+  buffer ceiling (``statistics.PIPELINE_MAX_BUFFER``).
+
+Violations are typed (:class:`AuditViolation`) like ``plan_verify``'s
+and are NEVER baselinable.  The committed ratchet baseline
+(``jaxpr_baseline.json``) instead pins the audited program inventory —
+``program-name -> fill-loop count`` over the seven paper queries plus a
+batched serving probe — and the comparison fails in BOTH directions like
+``sync_lint``: a new loop (you added a launch) and a vanished program
+(coverage silently shrank) both fail CI.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis.jaxpr_audit
+    PYTHONPATH=src python -m repro.analysis.jaxpr_audit --write-baseline
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import sys
+
+import jax
+import numpy as np
+
+DEFAULT_BASELINE = pathlib.Path(__file__).with_name("jaxpr_baseline.json")
+
+# Host-callback primitives: any of these inside a traced program is a
+# hidden device->host round-trip (jax wraps them all over `callback`).
+HOST_CALLBACK_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+})
+
+# Primitives whose params carry sub-jaxprs we must recurse into.  The
+# walk is generic (any param holding a Jaxpr/ClosedJaxpr is followed),
+# this set only documents the expected carriers.
+SUBJAXPR_PRIMS = frozenset({
+    "while", "scan", "cond", "pjit", "custom_jvp_call", "custom_vjp_call",
+    "remat", "checkpoint", "pallas_call",
+})
+
+
+class JaxprAuditError(AssertionError):
+    """Raised by :func:`assert_clean` with the violation list attached."""
+
+    def __init__(self, violations: list["AuditViolation"]):
+        self.violations = list(violations)
+        lines = "\n  ".join(str(v) for v in violations)
+        super().__init__(f"jaxpr audit failed "
+                         f"({len(violations)} violation(s)):\n  {lines}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditViolation:
+    """One typed trace-level invariant violation (cf. ``PlanViolation``)."""
+
+    code: str       # "host-callback" | "launch-budget" | ...
+    where: str      # program name (+ eqn path)
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.code}] {self.where}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """What the lowered program declares about its own trace.
+
+    ``loops`` is one entry per expected fill loop, in program order:
+    ``(kind, var, cap, morsel)`` — the loop's carried buffers must have
+    trailing dim ``cap``.  ``batch`` > 0 means every buffer grows one
+    leading batch axis (the vmapped serving path)."""
+
+    name: str
+    loops: tuple = ()
+    batch: int = 0
+    # None -> read jax.config at audit time (the CI legs differ only in
+    # REPRO_ENGINE_BACKEND, not x64, but tests inject both states)
+    allow_64: bool | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramReport:
+    name: str
+    n_eqns: int
+    fill_loops: int
+    host_callbacks: int
+
+
+def _fold_has_loop(sr, cons) -> bool:
+    """Mirror of ``backend._fold_body``'s statically-decided shortcut: a
+    probe-free COUNT fold with no leaf annotations folds inside the
+    counting pass and traces NO fill loop."""
+    plain = len(cons) == 1 and all(c[3] < 0 for c in cons)
+    return not (plain and getattr(sr, "name", None) == "count")
+
+
+def spec_for_bag(name: str, prog: tuple, *, batch: int = 0,
+                 allow_64: bool | None = None) -> ProgramSpec:
+    """Derive the expected loop inventory from a lowered bag program
+    (the hashable ``prog`` tuple ``DeviceBackend._lower_bag`` builds)."""
+    loops = []
+    cap = 1
+    for step in prog:
+        kind = step[0]
+        if kind == "extend":
+            _, var, cap_out, morsel, _cons = step
+            loops.append(("extend", var, int(cap_out), int(morsel)))
+            cap = int(cap_out)
+        elif kind == "fold":
+            _, var, morsel, sr, cons = step
+            if _fold_has_loop(sr, cons):
+                loops.append(("fold", var, cap, int(morsel)))
+        # "annmul" steps are pure gathers: no loop
+    return ProgramSpec(name=name, loops=tuple(loops), batch=batch,
+                       allow_64=allow_64)
+
+
+def spec_for_fixpoint(name: str, *, state_dim: int, batch: int = 0,
+                      loops: int = 1,
+                      allow_64: bool | None = None) -> ProgramSpec:
+    """Fixpoint programs: one while_loop carrying the dense state vector
+    (``loops=0`` for the fori/scan-shaped fixed-iteration naive path)."""
+    entries = tuple(("fixpoint", name, int(state_dim), 0)
+                    for _ in range(loops))
+    return ProgramSpec(name=name, loops=entries, batch=batch,
+                       allow_64=allow_64)
+
+
+# ------------------------------------------------------------ jaxpr walk
+def _sub_jaxprs(eqn) -> list:
+    subs = []
+    for v in eqn.params.values():
+        for item in (v if isinstance(v, (list, tuple)) else (v,)):
+            inner = getattr(item, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                subs.append(inner)          # ClosedJaxpr
+            elif hasattr(item, "eqns"):
+                subs.append(item)           # raw Jaxpr
+    return subs
+
+
+def iter_eqns(jaxpr, *, into_pallas: bool = True, _path: str = ""):
+    """Yield ``(eqn, path, in_pallas)`` over the whole equation graph,
+    recursing into every sub-jaxpr (``while``/``scan``/``cond``/``pjit``
+    bodies, custom-derivative wrappers, and — when ``into_pallas`` —
+    Pallas kernel bodies, whose loops are grid-local, not launches)."""
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        path = f"{_path}/{name}" if _path else name
+        in_pallas = "pallas_call" in _path.split("/")
+        yield eqn, path, in_pallas
+        if name == "pallas_call" and not into_pallas:
+            continue
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, into_pallas=into_pallas, _path=path)
+
+
+def _avals_of(eqn):
+    for v in list(eqn.invars) + list(eqn.outvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None and getattr(aval, "dtype", None) is not None \
+                and getattr(aval, "shape", None) is not None:
+            yield aval
+
+
+_WIDE = frozenset({"int64", "uint64", "float64", "complex128"})
+
+
+def audit_closed_jaxpr(closed, spec: ProgramSpec,
+                       *, broadcast_limit: int | None = None
+                       ) -> list[AuditViolation]:
+    """Run every trace-level check on one ClosedJaxpr; return violations."""
+    from repro.core import statistics as S
+    if broadcast_limit is None:
+        broadcast_limit = S.PIPELINE_MAX_BUFFER
+    allow_64 = (bool(jax.config.jax_enable_x64)
+                if spec.allow_64 is None else spec.allow_64)
+    out: list[AuditViolation] = []
+    jaxpr = closed.jaxpr
+
+    # widths the program's own inputs declare (catalog annotation dtypes
+    # enter here) are never "widening"
+    declared = {str(v.aval.dtype) for v in jaxpr.invars
+                if getattr(v.aval, "dtype", None) is not None}
+    declared |= {str(np.asarray(c).dtype) for c in closed.consts}
+
+    # ---- static bucket validity of the DECLARED capacities
+    for kind, var, cap, morsel in spec.loops:
+        if kind != "extend":
+            continue
+        ok = (cap >= S.PIPELINE_MIN_BUCKET
+              and cap <= S.PIPELINE_MAX_BUFFER
+              and (cap & (cap - 1)) == 0
+              and morsel > 0 and (morsel & (morsel - 1)) == 0
+              and morsel <= cap and cap % morsel == 0)
+        if not ok:
+            out.append(AuditViolation(
+                "frontier-bucket", f"{spec.name}::{var}",
+                f"declared cap {cap} / morsel {morsel} is not a pow2 "
+                f"frontier_capacity bucket in "
+                f"[{S.PIPELINE_MIN_BUCKET}, {S.PIPELINE_MAX_BUFFER}]"))
+
+    fill_loops = []     # (eqn, path) outside pallas kernels, in order
+    callbacks = 0
+    wide_seen = set()
+    for eqn, path, in_pallas in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name in HOST_CALLBACK_PRIMS:
+            callbacks += 1
+            out.append(AuditViolation(
+                "host-callback", f"{spec.name}::{path}",
+                f"host callback primitive `{name}` inside a traced "
+                f"program — a hidden device->host round-trip"))
+        if name == "while" and not in_pallas:
+            fill_loops.append((eqn, path))
+        if name == "broadcast_in_dim" and eqn.outvars:
+            aval = eqn.outvars[0].aval
+            size = int(np.prod(aval.shape)) if aval.shape else 1
+            if size > broadcast_limit:
+                out.append(AuditViolation(
+                    "broadcast-materialize", f"{spec.name}::{path}",
+                    f"broadcast materializes {size} elements "
+                    f"(> {broadcast_limit} buffer ceiling) "
+                    f"of {aval.dtype}"))
+        if not allow_64:
+            for aval in _avals_of(eqn):
+                dt = str(aval.dtype)
+                if dt in _WIDE and dt not in declared \
+                        and (spec.name, dt) not in wide_seen:
+                    wide_seen.add((spec.name, dt))
+                    out.append(AuditViolation(
+                        "dtype-widening", f"{spec.name}::{path}",
+                        f"{dt} aval with x64 disabled and no {dt} "
+                        f"program input — a silent width leak"))
+
+    # ---- launch budget: exactly the declared fill loops, in order
+    if len(fill_loops) != len(spec.loops):
+        out.append(AuditViolation(
+            "launch-budget", spec.name,
+            f"traced {len(fill_loops)} while-loop(s), lowered program "
+            f"declares {len(spec.loops)} fill loop(s) "
+            f"({[(k, v) for k, v, _c, _m in spec.loops]})"))
+    else:
+        base_ndim = 1 if spec.batch else 0
+        for (eqn, path), (kind, var, cap, _morsel) in zip(fill_loops,
+                                                          spec.loops):
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                shape = getattr(aval, "shape", None)
+                if shape is None or len(shape) <= base_ndim:
+                    continue    # chunk counters (scalars / [B])
+                if int(shape[-1]) != int(cap):
+                    out.append(AuditViolation(
+                        "frontier-cap", f"{spec.name}::{path}",
+                        f"{kind} '{var}' fill loop carries a buffer of "
+                        f"shape {tuple(shape)} but the plan-lowered "
+                        f"capacity is {cap}"))
+                    break
+    return out
+
+
+def assert_clean(closed, spec: ProgramSpec) -> None:
+    violations = audit_closed_jaxpr(closed, spec)
+    if violations:
+        raise JaxprAuditError(violations)
+
+
+# ----------------------------------------------- retracing recorded programs
+def trace_record(rec: tuple):
+    """Retrace one audit-log record (see ``DeviceBackend.audit_log`` and
+    ``recursion.AUDIT_LOG``) to ``(ClosedJaxpr, ProgramSpec)`` — purely
+    abstract: the record holds ShapeDtypeStructs, not arrays."""
+    from repro.core import backend as backend_mod
+    from repro.core import recursion as recursion_mod
+    kind = rec[0]
+    if kind == "bag":
+        _, name, prog, arrays, cursors, ann, fill_mode, fill_interpret = rec
+
+        def fn(arrays, cursors0, ann):
+            return backend_mod._bag_program(
+                arrays, cursors0, ann, prog=prog, fill_mode=fill_mode,
+                fill_interpret=fill_interpret)
+
+        closed = jax.make_jaxpr(fn)(arrays, cursors, ann)
+        return closed, spec_for_bag(name, prog)
+    if kind == "bag_batch":
+        _, name, prog, arrays, cursors, ann, batch, fill_interpret = rec
+
+        def fnb(arrays, cursors0, ann):
+            return backend_mod._bag_program_batch(
+                arrays, cursors0, ann, prog=prog,
+                fill_interpret=fill_interpret)
+
+        closed = jax.make_jaxpr(fnb)(arrays, cursors, ann)
+        return closed, spec_for_bag(name, prog, batch=batch)
+    if kind == "seminaive":
+        _, name, sr, apply_expr, max_rounds, n, args = rec
+
+        def fns(gather, scatter, edge_ann, state0, frontier0):
+            return recursion_mod._seminaive_device(
+                sr, apply_expr, max_rounds, n,
+                gather, scatter, edge_ann, state0, frontier0)
+
+        closed = jax.make_jaxpr(fns)(*args)
+        return closed, spec_for_fixpoint(name, state_dim=n)
+    if kind == "naive":
+        (_, name, sr, apply_expr, iters, tol, max_rounds, k,
+         factor_kinds, args) = rec
+
+        def fnn(out_idx, rec_idx, factor_anns, ann0):
+            return recursion_mod._naive_device(
+                sr, apply_expr, iters, tol, max_rounds, k,
+                factor_kinds, out_idx, rec_idx, factor_anns, ann0)
+
+        closed = jax.make_jaxpr(fnn)(*args)
+        loops = 0 if iters is not None else 1
+        return closed, spec_for_fixpoint(name, state_dim=k, loops=loops)
+    raise ValueError(f"unknown audit record kind {kind!r}")
+
+
+def audit_records(records, *, counters=None
+                  ) -> tuple[list[ProgramReport], list[AuditViolation]]:
+    """Retrace + audit every recorded program.  ``counters`` (a
+    Counter-like mapping, e.g. ``backend.stats``) receives the
+    ``analysis.jaxpr_*`` tallies ``dispatch_summary()`` surfaces."""
+    reports: list[ProgramReport] = []
+    violations: list[AuditViolation] = []
+    for rec in records:
+        closed, spec = trace_record(rec)
+        vs = audit_closed_jaxpr(closed, spec)
+        violations.extend(vs)
+        n_eqns = sum(1 for _ in iter_eqns(closed.jaxpr))
+        fills = sum(1 for eqn, _p, in_p in iter_eqns(closed.jaxpr)
+                    if eqn.primitive.name == "while" and not in_p)
+        cbs = sum(1 for eqn, _p, _ip in iter_eqns(closed.jaxpr)
+                  if eqn.primitive.name in HOST_CALLBACK_PRIMS)
+        reports.append(ProgramReport(name=spec.name, n_eqns=n_eqns,
+                                     fill_loops=fills,
+                                     host_callbacks=cbs))
+        if counters is not None:
+            counters["analysis.jaxpr_programs"] += 1
+            counters["analysis.jaxpr_violations"] += len(vs)
+    return reports, violations
+
+
+# ----------------------------------------------- the paper-query inventory
+def collect_paper_programs(*, smoke: bool = True):
+    """Run the seven paper queries (Table 2 patterns + triangle listing +
+    the SSSP/PageRank fixpoints) plus one batched serving probe on a
+    DeviceBackend with audit recording on; return ``(records, engine)``.
+
+    The device backend runs on whatever jax platform is present (CPU in
+    CI) — the traced programs are identical, which is why this audit is
+    meaningful on both CI legs."""
+    from repro.core import recursion as recursion_mod
+    from repro.core.engine import Engine
+    from repro.core.workload import ALIASES, TRIANGLE_LIST, paper_query_set
+    from repro.data import powerlaw_graph
+
+    n, deg = (60, 4) if smoke else (600, 8)
+    g = powerlaw_graph(n, deg, 2.0, seed=0)
+    src = np.repeat(np.arange(g.n), g.degrees)
+    hub = int(np.argmax(g.degrees))
+
+    eng = Engine(backend="device")
+    eng.load_edges("Edge", src, g.neighbors)
+    for al in ALIASES:
+        eng.alias(al, "Edge")
+
+    records: list[tuple] = []
+    eng.backend.audit_log = records
+    recursion_mod.AUDIT_LOG = records
+    try:
+        queries = list(paper_query_set(source=hub))
+        queries.insert(1, ("triangle_list", TRIANGLE_LIST))
+        for qname, q in queries:
+            before = len(records)
+            eng.query(q)
+            # label this query's records (run_bag appends unnamed)
+            for i in range(before, len(records)):
+                rec = records[i]
+                records[i] = (rec[0], f"{qname}::{rec[0]}{i - before}",
+                              *rec[2:])
+        # the batched serving path: one vmapped program over B probes
+        pq = eng.prepare(
+            "C(;w:long) :- R(0,y),S(y,z),T(0,z); w=<<COUNT(*)>>.")
+        before = len(records)
+        pq.run_batch([hub, 0, 1, 2])
+        for i in range(before, len(records)):
+            rec = records[i]
+            records[i] = (rec[0], f"serve_batch::{rec[0]}{i - before}",
+                          *rec[2:])
+    finally:
+        eng.backend.audit_log = None
+        recursion_mod.AUDIT_LOG = None
+    return records, eng
+
+
+def audit_paper_queries(*, smoke: bool = True):
+    records, eng = collect_paper_programs(smoke=smoke)
+    reports, violations = audit_records(records,
+                                        counters=eng.backend.stats)
+    return reports, violations
+
+
+# --------------------------------------------------------------- baseline
+def baseline_counts(reports: list[ProgramReport]) -> dict[str, int]:
+    return {r.name: r.fill_loops for r in
+            sorted(reports, key=lambda r: r.name)}
+
+
+def load_baseline(path: pathlib.Path = DEFAULT_BASELINE) -> dict[str, int]:
+    return {str(k): int(v)
+            for k, v in json.loads(path.read_text()).items()}
+
+
+def write_baseline(reports: list[ProgramReport],
+                   path: pathlib.Path = DEFAULT_BASELINE) -> None:
+    path.write_text(json.dumps(baseline_counts(reports), indent=2) + "\n")
+
+
+def compare(reports: list[ProgramReport],
+            baseline: dict[str, int]) -> tuple[list[str], list[str]]:
+    """(new, removed) program/loop drift — both directions fail CI."""
+    counts = baseline_counts(reports)
+    new = sorted(f"{k} ({v} loop(s), baseline {baseline.get(k, 'absent')})"
+                 for k, v in counts.items() if baseline.get(k) != v)
+    removed = sorted(f"{k} ({v} loop(s))"
+                     for k, v in baseline.items() if k not in counts)
+    return new, removed
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    write = "--write-baseline" in argv
+    smoke = "--full" not in argv
+    reports, violations = audit_paper_queries(smoke=smoke)
+    for r in reports:
+        print(f"ok: {r.name} ({r.fill_loops} fill loop(s), "
+              f"{r.n_eqns} eqn(s), {r.host_callbacks} host callback(s))")
+    if violations:
+        print(f"{len(violations)} trace-level violation(s) "
+              f"(never baselinable):")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    if write:
+        write_baseline(reports)
+        print(f"wrote {DEFAULT_BASELINE.name}: "
+              f"{len(reports)} audited program(s)")
+        return 0
+    try:
+        baseline = load_baseline()
+    except FileNotFoundError:
+        print(f"missing {DEFAULT_BASELINE}; run with --write-baseline")
+        return 1
+    new, removed = compare(reports, baseline)
+    if new:
+        print("program/loop drift vs baseline (a new launch or a changed "
+              "loop structure):")
+        for k in new:
+            print(f"  + {k}")
+    if removed:
+        print("baselined programs no longer audited (coverage shrank) — "
+              "refresh with --write-baseline if intended:")
+        for k in removed:
+            print(f"  - {k}")
+    return 1 if (new or removed) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,294 @@
+"""Static HBM footprint model, cross-checked against live allocations.
+
+The serving layer budgets device residency (``serve.GraphStore``), but
+host-side ``Trie.nbytes()`` is the WRONG number on device: trie level
+offsets are int64 on the host and ``_IDX`` (int32 without x64) on
+device, annotations narrow under the x64 regime, and the blocked-bitset
+block directories (uploaded for the counting pass's sideways
+intersection) are invisible to the host view entirely.  This module
+computes a **model** of device bytes purely from host shapes + the
+x64-canonical dtypes (``kernels.common.canonical_dtype``) and
+cross-checks it against the **live** bytes of the identity-keyed device
+caches — read via buffer inspection (``.nbytes`` on the cached arrays),
+never ``device_get``, so the check itself is invisible to the host-sync
+budget.
+
+Three views:
+
+* :func:`trie_footprint` — per-component ``(model, live)`` bytes of one
+  trie's resident device caches (level values / offsets, annotation,
+  bitset directories);
+* :func:`trie_device_bytes` — the model total of the RESIDENT
+  components.  ``serve.GraphStore.resident_bytes`` budgets eviction on
+  this instead of ``Trie.nbytes()``;
+* :func:`program_frontier_bytes` / :func:`plan_frontier_bytes` — the
+  static peak frontier-buffer bytes one bag launch allocates (per
+  extend step: ``cap × (values + row + seed-pos + per-probe pos + keep)``,
+  times the vmapped batch dim), from the audited lowered program or the
+  plan IR — the transient half of the per-plan HBM story;
+* :func:`fixpoint_state_bytes` — the dense fixpoint state one device
+  recursion round carries.
+
+Drift between model and live beyond :data:`DEFAULT_TOLERANCE` is a
+modeling bug we want loud: :func:`check_tries` raises through
+:class:`MemoryBudgetError` and CI runs the CLI on both backend legs::
+
+    PYTHONPATH=src python -m repro.analysis.memory_budget
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+
+import numpy as np
+
+from repro.kernels.common import canonical_dtype
+
+# |model - live| <= tol * max(model, 1): the model predicts exact array
+# nbytes, so any real drift means a component we failed to account for.
+DEFAULT_TOLERANCE = 0.05
+
+
+class MemoryBudgetError(AssertionError):
+    """Raised when the static model drifts from live device allocations."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Component:
+    """One device-cached array family of a trie."""
+
+    name: str           # "level0.values" | "annotation" | "bitset_dir" ...
+    model_bytes: int    # predicted from host shape + canonical dtype
+    live_bytes: int     # actual .nbytes of the cached (device) arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class TrieFootprint:
+    trie: str
+    components: tuple
+
+    @property
+    def model_bytes(self) -> int:
+        return sum(c.model_bytes for c in self.components)
+
+    @property
+    def live_bytes(self) -> int:
+        return sum(c.live_bytes for c in self.components)
+
+
+def _idx_itemsize() -> int:
+    from repro.core.backend import _IDX_NP
+    return int(np.dtype(_IDX_NP).itemsize)
+
+
+def _nbytes(x) -> int:
+    return int(getattr(x, "nbytes", 0))
+
+
+def _model_bytes(host_arr) -> int:
+    return int(host_arr.size) * int(canonical_dtype(host_arr.dtype).itemsize)
+
+
+def trie_footprint(trie) -> TrieFootprint:
+    """Per-component model-vs-live device bytes of one trie's RESIDENT
+    caches.  Components with no device cache contribute nothing — the
+    footprint is what eviction would actually reclaim."""
+    comps: list[Component] = []
+    idx = _idx_itemsize()
+    for i, lv in enumerate(trie.levels):
+        cached = lv.__dict__.get("_dev_values")
+        if cached is not None:
+            comps.append(Component(
+                f"level{i}.values", _model_bytes(lv.values),
+                _nbytes(cached[1])))
+        cached = lv.__dict__.get("_dev_offsets")
+        if cached is not None:
+            # offsets upload through backend._up_idx: always _IDX_NP
+            comps.append(Component(
+                f"level{i}.offsets", int(lv.offsets.size) * idx,
+                _nbytes(cached[1])))
+    cached = trie.__dict__.get("_dev_annotation")
+    if cached is not None:
+        comps.append(Component(
+            "annotation", _model_bytes(trie.annotation),
+            _nbytes(cached[1])))
+    for key, store in sorted(
+            (trie.__dict__.get("_hybrid_stores") or {}).items(),
+            key=repr):
+        bs = getattr(store, "bitset", None)
+        sw = getattr(bs, "_dev_sideways_cache", None) if bs is not None \
+            else None
+        if sw is None or sw[0] is not bs.block_ids:
+            continue
+        model = (int(np.asarray(bs.slot_of).size) * 4
+                 + int(np.asarray(bs.offsets).size) * idx
+                 + int(np.asarray(bs.block_ids).size) * 4)
+        live = sum(_nbytes(a) for a in sw[1])
+        comps.append(Component(f"bitset_dir[{key[0]}:{key[1]}]",
+                               model, live))
+    return TrieFootprint(trie=trie.name, components=tuple(comps))
+
+
+def trie_device_bytes(trie) -> int:
+    """Model-side device bytes of the trie's resident caches — the number
+    ``serve.GraphStore`` budgets eviction on (host ``nbytes()`` counts
+    int64 offsets the device never holds)."""
+    return trie_footprint(trie).model_bytes
+
+
+def trie_full_upload_bytes(trie) -> int:
+    """Model device bytes if every level, the annotation AND every
+    already-built bitset directory were resident — capacity planning
+    for admission, independent of current caches."""
+    idx = _idx_itemsize()
+    total = 0
+    for lv in trie.levels:
+        total += _model_bytes(lv.values) + int(lv.offsets.size) * idx
+    if trie.annotation is not None:
+        total += _model_bytes(trie.annotation)
+    for store in (trie.__dict__.get("_hybrid_stores") or {}).values():
+        bs = getattr(store, "bitset", None)
+        if bs is not None:
+            total += (int(np.asarray(bs.slot_of).size) * 4
+                      + int(np.asarray(bs.offsets).size) * idx
+                      + int(np.asarray(bs.block_ids).size) * 4)
+    return total
+
+
+# ------------------------------------------------------ transient buffers
+def program_frontier_bytes(prog, *, batch: int = 1) -> int:
+    """Peak static frontier-buffer bytes of one lowered bag program: per
+    extend step the fill loop carries ``cap`` rows of values(int32) +
+    source-row/seed-pos/per-probe positions(_IDX) + keep(bool), and the
+    batched path allocates all of it ``batch`` times (leading vmap axis
+    — ``statistics.max_batch`` sizes B against the same ceiling)."""
+    idx = _idx_itemsize()
+    total = 0
+    for step in prog:
+        if step[0] != "extend":
+            continue
+        _, _var, cap_out, _morsel, cons = step
+        nprobes = max(len(cons) - 1, 0)
+        per_row = 4 + idx * (2 + nprobes) + 1
+        total += int(cap_out) * per_row
+    return total * max(int(batch), 1)
+
+
+def plan_frontier_bytes(pplan, *, batch: int = 1) -> int:
+    """Same model from the plan IR (pre-lowering): each ``Extend`` step's
+    ``frontier_cap`` estimate through ``statistics.frontier_capacity``
+    with the morsel hint — the capacity the pipeline will declare unless
+    the live cross-product bound clamps it further (this is therefore an
+    upper-bound model)."""
+    from repro.core import plan_ir as P
+    from repro.core import statistics as S
+    idx = _idx_itemsize()
+    total = 0
+    for bag in pplan.bag_ops:
+        morsel = bag.hints().morsel or S.DEFAULT_MORSEL
+        for s in bag.steps:
+            if not isinstance(s, P.Extend) or s.frontier_cap is None:
+                continue
+            cap = S.frontier_capacity(float(s.frontier_cap),
+                                      S.PIPELINE_MAX_BUFFER, int(morsel))
+            nprobes = max(int(s.n_constraining) - 1, 0)
+            total += cap * (4 + idx * (2 + nprobes) + 1)
+    return total * max(int(batch), 1)
+
+
+def fixpoint_state_bytes(n: int, dtype) -> int:
+    """Dense device fixpoint state: annotation vector over [0, n) plus
+    the boolean frontier mask (``recursion._seminaive_device``)."""
+    return int(n) * (int(canonical_dtype(dtype).itemsize) + 1)
+
+
+# ------------------------------------------------------------ cross-check
+def check_tries(tries, *, tolerance: float = DEFAULT_TOLERANCE,
+                counters=None) -> list[TrieFootprint]:
+    """Cross-check model vs live for every trie; raise on drift.
+
+    ``counters`` (e.g. ``backend.stats``) receives the
+    ``analysis.memory_*`` tallies surfaced by ``dispatch_summary()``."""
+    fps = []
+    for t in tries:
+        fp = trie_footprint(t)
+        fps.append(fp)
+        if counters is not None:
+            counters["analysis.memory_checks"] += 1
+            counters["analysis.memory_model_bytes"] += fp.model_bytes
+        drift = abs(fp.model_bytes - fp.live_bytes)
+        if drift > tolerance * max(fp.model_bytes, 1):
+            comps = ", ".join(f"{c.name}: model={c.model_bytes} "
+                              f"live={c.live_bytes}"
+                              for c in fp.components)
+            raise MemoryBudgetError(
+                f"trie '{fp.trie}': static model {fp.model_bytes}B vs "
+                f"live device {fp.live_bytes}B (drift {drift}B > "
+                f"{tolerance:.0%}) — [{comps}]")
+    return fps
+
+
+def check_store(server, *, tolerance: float = DEFAULT_TOLERANCE
+                ) -> dict[str, dict[str, int]]:
+    """Per-tenant model-vs-live report over a ``QueryServer``'s store
+    (the serve_bench artifact + gate).  Raises on drift."""
+    out: dict[str, dict[str, int]] = {}
+    for tenant in server.store.tenants():
+        tries = [t for t in server.store._tries.get(tenant, ())
+                 if t.device_resident]
+        fps = check_tries(tries, tolerance=tolerance,
+                          counters=server.backend.stats)
+        model = sum(fp.model_bytes for fp in fps)
+        live = sum(fp.live_bytes for fp in fps)
+        out[tenant] = {"model_bytes": model, "live_bytes": live,
+                       "delta_bytes": live - model}
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    from repro.core.engine import Engine
+    from repro.core.workload import ALIASES, FOUR_CLIQUE, TRIANGLE_COUNT
+    from repro.data import powerlaw_graph
+
+    g = powerlaw_graph(80, 5, 2.0, seed=0)
+    src = np.repeat(np.arange(g.n), g.degrees)
+    eng = Engine(backend="device")
+    trie = eng.load_edges("Edge", src, g.neighbors)
+    for al in ALIASES:
+        eng.alias(al, "Edge")
+    # record the lowered bag programs on the FIRST run — identical
+    # reruns are served from the engine-lifetime BagResultCache and
+    # never reach the backend
+    records: list = []
+    eng.backend.audit_log = records
+    try:
+        eng.query(TRIANGLE_COUNT)
+        eng.query(FOUR_CLIQUE)
+    finally:
+        eng.backend.audit_log = None
+
+    status = 0
+    try:
+        fps = check_tries([trie], counters=eng.backend.stats)
+    except MemoryBudgetError as e:
+        print(f"FAIL: {e}")
+        return 1
+    for fp in fps:
+        print(f"ok: trie '{fp.trie}' model={fp.model_bytes}B "
+              f"live={fp.live_bytes}B "
+              f"(host nbytes={eng.catalog.get('Edge').nbytes()}B)")
+        for c in fp.components:
+            print(f"    {c.name}: model={c.model_bytes}B "
+                  f"live={c.live_bytes}B")
+    for rec in records:
+        if rec[0] not in ("bag", "bag_batch"):
+            continue
+        prog = rec[2]
+        print(f"frontier[{rec[1]}]: {program_frontier_bytes(prog)}B peak "
+              f"({sum(1 for s in prog if s[0] == 'extend')} extend(s))")
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

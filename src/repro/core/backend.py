@@ -50,7 +50,7 @@ from repro.core import intersect as I
 from repro.core.layouts import engine_store_for
 from repro.core.semiring import Semiring
 from repro.kernels.bitset_intersect.ops import as_word_kernel
-from repro.kernels.common import host_get, interpret_default
+from repro.kernels.common import audit_avals, host_get, interpret_default
 from repro.kernels.frontier_fill import ops as ff_ops
 from repro.kernels.frontier_fill import ref as ff_ref
 from repro.kernels.materialize.ops import as_materialize_kernel
@@ -263,6 +263,12 @@ class DeviceBackend(ExecBackend):
         # overflow-retried execution, so repeated queries size their
         # frontier buffers right the first time (see GenericJoin.run)
         self.cap_feedback: Dict[Tuple, Dict[str, int]] = {}
+        # trace-level audit hook (repro.analysis.jaxpr_audit): when a
+        # list, run_bag/run_bag_batched append an abstract record of
+        # every dispatched program — (kind, name, prog, operand avals,
+        # cursor avals, ann aval, ...) — so the auditor can retrace the
+        # exact jaxprs the engine ran without holding device buffers.
+        self.audit_log: Optional[List[tuple]] = None
 
         def uint_kernel(offsets, neighbors, u, v):
             return intersect_count_csr_batched(
@@ -555,6 +561,11 @@ class DeviceBackend(ExecBackend):
         cur_canon = {canon[k]: self._up_idx(c)
                      for k, c in cursors0.items()}
         ann = jnp.asarray(ann0) if ann0 is not None else None
+        if self.audit_log is not None:
+            self.audit_log.append(
+                ("bag", "bag", prog_t, audit_avals(tuple(arrays)),
+                 audit_avals(cur_canon), audit_avals(ann),
+                 self.fill_mode, self._fill_interpret))
         (count, overflow, morsels, lcounts, needs, cols, cursors,
          ann_o) = self._timed(
             ("bag", prog_t, self.fill_mode),
@@ -688,6 +699,11 @@ class DeviceBackend(ExecBackend):
         cur_canon = {canon[k]: self._up_idx(c)
                      for k, c in cursors0.items()}
         ann = jnp.asarray(ann0) if ann0 is not None else None
+        if self.audit_log is not None:
+            self.audit_log.append(
+                ("bag_batch", "bag_batch", prog_t,
+                 audit_avals(tuple(arrays)), audit_avals(cur_canon),
+                 audit_avals(ann), int(b), self._fill_interpret))
         (count, overflow, morsels, lcounts, needs, cols, cursors,
          ann_o) = self._timed(
             ("bag_batch", prog_t, int(b)),

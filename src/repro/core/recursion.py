@@ -25,7 +25,13 @@ import numpy as np
 
 from repro.core.semiring import MIN_PLUS, SUM_F32, Semiring
 from repro.core.trie import CSRGraph
-from repro.kernels.common import host_get
+from repro.kernels.common import audit_avals, host_get
+
+# trace-level audit hook (repro.analysis.jaxpr_audit): when a list, the
+# device fixpoint entry points append an abstract record — (kind, name,
+# static params, operand avals) — before dispatching, so the auditor can
+# retrace the exact fixpoint jaxprs without re-running queries.
+AUDIT_LOG: Optional[list] = None
 
 
 # ------------------------------------------------------------------- spmv
@@ -280,9 +286,14 @@ def seminaive_device_fixpoint(sr: Semiring, apply_expr: ExprFn,
         jnp.asarray(ann0).astype(dt))
     frontier0 = jnp.zeros((n,), jnp.bool_).at[jnp.asarray(keys0)].set(True)
     ea = None if edge_ann is None else jnp.asarray(edge_ann).astype(dt)
+    g, sc = jnp.asarray(gather), jnp.asarray(scatter)
+    if AUDIT_LOG is not None:
+        AUDIT_LOG.append(
+            ("seminaive", "seminaive", sr, apply_expr, int(max_rounds),
+             int(n), audit_avals((g, sc, ea, state0, frontier0))))
     state, rounds = _seminaive_device(
-        sr, apply_expr, int(max_rounds), int(n),
-        jnp.asarray(gather), jnp.asarray(scatter), ea, state0, frontier0)
+        sr, apply_expr, int(max_rounds), int(n), g, sc, ea, state0,
+        frontier0)
     state_h, rounds_h = host_get((state, rounds))  # the one sync
     state_h = np.asarray(state_h, dtype=np.float64)
     derived = state_h != float(np.asarray(sr.zero))
@@ -349,10 +360,16 @@ def naive_device_fixpoint(sr: Semiring, apply_expr: ExprFn,
     """Host entry point for the device naive loop; ONE final sync."""
     dt = jnp.zeros((), sr.dtype).dtype
     anns = tuple(jnp.asarray(a).astype(dt) for a in factor_anns)
+    oi, ri = jnp.asarray(out_idx), jnp.asarray(rec_idx)
+    a0 = jnp.asarray(ann0).astype(dt)
+    if AUDIT_LOG is not None:
+        AUDIT_LOG.append(
+            ("naive", "naive", sr, apply_expr, iters, tol,
+             int(max_rounds), int(k), tuple(factor_kinds),
+             audit_avals((oi, ri, anns, a0))))
     ann, rounds = _naive_device(
         sr, apply_expr, iters, tol, int(max_rounds), int(k),
-        tuple(factor_kinds), jnp.asarray(out_idx), jnp.asarray(rec_idx),
-        anns, jnp.asarray(ann0).astype(dt))
+        tuple(factor_kinds), oi, ri, anns, a0)
     ann_h, rounds_h = host_get((ann, rounds))
     return np.asarray(ann_h, dtype=np.float64), int(rounds_h)
 

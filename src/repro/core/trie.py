@@ -292,6 +292,15 @@ class Trie:
                     dropped += 1
         if self.__dict__.pop("_dev_annotation", None) is not None:
             dropped += 1
+        # the blocked-bitset DIRECTORY uploads (the counting pass's
+        # sideways block intersection) hang off the layout stores this
+        # trie caches — byte-accurate eviction must drop those too, or
+        # an "evicted" tenant would keep device memory pinned
+        for store in (self.__dict__.get("_hybrid_stores") or {}).values():
+            bs = getattr(store, "bitset", None)
+            if bs is not None and bs.__dict__.pop(
+                    "_dev_sideways_cache", None) is not None:
+                dropped += 1
         return dropped
 
 

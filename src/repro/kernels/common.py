@@ -45,6 +45,34 @@ def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def audit_avals(tree):
+    """ShapeDtypeStruct mirror of a pytree of (device) arrays.
+
+    The trace-level auditor (``repro.analysis.jaxpr_audit``) records
+    program operands through this instead of keeping live buffers: avals
+    are enough to retrace abstractly with ``jax.make_jaxpr``, retain no
+    device memory, and — crucially — cause no transfer, so recording is
+    invisible to the host-sync budget."""
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        tree)
+
+
+def canonical_dtype(dt) -> np.dtype:
+    """The dtype a host array actually has ON DEVICE under the current
+    x64 regime: ``jnp.asarray`` silently narrows 64-bit widths when x64
+    is off, which is exactly why device-byte accounting
+    (``repro.analysis.memory_budget``) must not trust host ``nbytes``."""
+    dt = np.dtype(dt)
+    if jax.config.jax_enable_x64:
+        return dt
+    down = {"int64": np.int32, "uint64": np.uint32,
+            "float64": np.float32, "complex128": np.complex64}
+    return np.dtype(down.get(dt.name, dt))
+
+
 def host_get(tree):
     """THE device→host transfer of the engine's device-resident paths.
 

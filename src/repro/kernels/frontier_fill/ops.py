@@ -142,3 +142,75 @@ CONTRACT = {
     "ref": _contract_ref,
     "make_inputs": _contract_inputs,
 }
+
+
+# ---------------------------------------------------------- vmap contract
+_CONTRACT_BATCH = 3
+
+
+def _contract_inputs_vmap():
+    """Three lanes of the contract chunk with per-lane cursor state: the
+    chunk index, seed bounds and probe windows all differ per lane (the
+    batched pipeline carries exactly these per query), so lane collapse
+    or cross-lane leakage cannot cancel out in the parity check."""
+    c, tc, offs, lo0, seed, v1, l1, h1, v2, l2, h2 = _contract_inputs()
+    n0 = len(seed)
+    lanes = []
+    for b in range(_CONTRACT_BATCH):
+        lanes.append((
+            np.asarray(b % 2, np.int32),          # lanes on chunk 0 AND 1
+            np.clip(lo0 + b, 0, n0 - 1).astype(np.int32),
+            l1, np.maximum(h1 - 7 * b, l1).astype(np.int32),
+            np.minimum(l2 + 3 * b, h2).astype(np.int32), h2,
+        ))
+    stacked = tuple(np.stack(cols) for cols in zip(*lanes))
+    return (stacked[0], tc, offs, stacked[1], seed,
+            v1, stacked[2], stacked[3], v2, stacked[4], stacked[5])
+
+
+def _vmap_one(c, tc, offs, lo0, seed, v1, l1, h1, v2, l2, h2):
+    vals, row, p0, keep, poss = fill_chunk(
+        c, tc, offs, lo0, seed, ((v1, l1, h1), (v2, l2, h2)),
+        morsel=_CONTRACT_MORSEL, interpret=True)
+    return (vals, row, p0, keep) + poss
+
+
+def _contract_entry_vmap(c, tc, offs, lo0, seed, v1, l1, h1, v2, l2, h2):
+    return jax.vmap(_vmap_one,
+                    in_axes=(0, None, None, 0, None,
+                             None, 0, 0, None, 0, 0))(
+        c, tc, offs, lo0, seed, v1, l1, h1, v2, l2, h2)
+
+
+def _contract_ref_vmap(c, tc, offs, lo0, seed, v1, l1, h1, v2, l2, h2):
+    """Per-lane oracle, sequentially: what the batched launch must equal
+    lane by lane."""
+    from repro.kernels.frontier_fill.ref import fill_chunk_ref
+
+    outs = []
+    for b in range(c.shape[0]):
+        vals, row, p0, keep, poss = fill_chunk_ref(
+            c[b], tc, offs, lo0[b], seed,
+            ((v1, l1[b], h1[b]), (v2, l2[b], h2[b])),
+            morsel=_CONTRACT_MORSEL)
+        outs.append((vals, row, p0, keep) + poss)
+    return tuple(jnp.stack(col) for col in zip(*outs))
+
+
+# ``jax.vmap`` DOES batch the fill launch and interpret-mode values stay
+# bit-exact per lane — but the batching rule REWRITES the launch away
+# from the declared contract: grid (1,) becomes (B, 1) and every batched
+# operand's block gains a leading ``Mapped`` (non-integer) dim while
+# closed-over operands keep rank-2 blocks.  The per-launch tiling
+# assertions of ``kernel_check`` cannot certify that mixed-rank form, so
+# ``core.backend._bag_program_batch`` pins ``fill_mode="jnp"``.
+# ``kernel_check.check_vmap_contract`` verifies the parity half and
+# raises a typed ``KernelVmapDivergence`` pinning the geometry half.
+CONTRACT_VMAP = {
+    "name": "frontier_fill[vmap]",
+    "entry": _contract_entry_vmap,
+    "ref": _contract_ref_vmap,
+    "make_inputs": _contract_inputs_vmap,
+    "declared_grid": (1,),
+    "batch": _CONTRACT_BATCH,
+}

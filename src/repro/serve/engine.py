@@ -11,8 +11,7 @@ parameterized plans and fused batch execution, is its sibling
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, List, Optional
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +40,7 @@ def make_decode_fn(cfg):
 class Request:
     prompt: np.ndarray           # [S] int32
     max_new_tokens: int = 16
-    out: Optional[List[int]] = None
+    out: list[int] | None = None
 
 
 class ServeEngine:
@@ -56,15 +55,15 @@ class ServeEngine:
         self.prefill = make_prefill_fn(cfg, max_len)
         self.decode = make_decode_fn(cfg)
 
-    def run(self, requests: List[Request]) -> List[List[int]]:
+    def run(self, requests: list[Request]) -> list[list[int]]:
         """Static batching MVP: pad prompts to a common length per wave."""
-        outs: List[List[int]] = []
+        outs: list[list[int]] = []
         for s in range(0, len(requests), self.batch):
             wave = requests[s:s + self.batch]
             outs.extend(self._run_wave(wave))
         return outs
 
-    def _run_wave(self, wave: List[Request]) -> List[List[int]]:
+    def _run_wave(self, wave: list[Request]) -> list[list[int]]:
         b = len(wave)
         plen = max(len(r.prompt) for r in wave)
         toks = np.zeros((self.batch, plen), np.int32)
@@ -89,6 +88,6 @@ def batched_scores(score_fn: Callable, inputs, batch: int):
     n = len(jax.tree.leaves(inputs)[0])
     outs = []
     for s in range(0, n, batch):
-        chunk = jax.tree.map(lambda x: x[s:s + batch], inputs)
+        chunk = jax.tree.map(lambda x, s=s: x[s:s + batch], inputs)
         outs.append(np.asarray(score_fn(chunk)))
     return np.concatenate(outs)

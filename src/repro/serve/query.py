@@ -36,9 +36,10 @@ Per-tenant dispatch counters (``tenant.<t>.queries`` / ``.batches`` /
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
-from typing import Dict, List, Optional, Tuple
 
+from repro.analysis.concurrency_lint import guarded_by
 from repro.core.backend import ExecBackend, make_backend
 from repro.core.engine import Engine, PreparedQuery, QueryResult
 from repro.core.trie import Trie
@@ -49,8 +50,8 @@ class Ticket:
     """Admission handle for one submitted query: filled by ``drain``."""
 
     tenant: str
-    params: Tuple[object, ...]
-    result: Optional[QueryResult] = None
+    params: tuple[object, ...]
+    result: QueryResult | None = None
     done: bool = False
 
 
@@ -68,38 +69,62 @@ class GraphStore:
     graph count (``max_graphs``) is exceeded, evicts the coldest
     tenant's device caches via :meth:`repro.core.trie.Trie.evict_device`.
     The most recently touched tenant is never evicted.
+
+    The byte budget is accounted in MODEL device bytes
+    (``analysis.memory_budget.trie_device_bytes``): host ``nbytes()``
+    counts int64 offsets the device never holds (x64 off narrows them
+    to int32 on upload) and misses the bitset block directories
+    entirely, so budgeting on it would over- or under-evict.
+
+    Thread safety: every public method takes ``self._lock`` (re-entrant
+    — ``enforce`` reads residency while holding it); the two
+    ``@guarded_by`` helpers document that their callers must already
+    hold it.  The discipline is machine-checked by
+    ``analysis.concurrency_lint``.
     """
 
-    def __init__(self, capacity_bytes: Optional[int] = None,
-                 max_graphs: Optional[int] = None):
+    def __init__(self, capacity_bytes: int | None = None,
+                 max_graphs: int | None = None):
         self.capacity_bytes = capacity_bytes
         self.max_graphs = max_graphs
+        self._lock = threading.RLock()
         # tenant -> registered tries, in LRU order (first = coldest)
-        self._tries: "OrderedDict[str, List[Trie]]" = OrderedDict()
+        self._tries: OrderedDict[str, list[Trie]] = OrderedDict()
         self.evictions = 0
 
     def register(self, tenant: str, trie: Trie) -> None:
-        self._tries.setdefault(tenant, []).append(trie)
-        self.touch(tenant)
-
-    def touch(self, tenant: str) -> None:
-        if tenant in self._tries:
+        with self._lock:
+            self._tries.setdefault(tenant, []).append(trie)
             self._tries.move_to_end(tenant)
 
-    def tenants(self) -> List[str]:
+    def touch(self, tenant: str) -> None:
+        with self._lock:
+            if tenant in self._tries:
+                self._tries.move_to_end(tenant)
+
+    def tenants(self) -> list[str]:
         """Tenants in LRU order (coldest first)."""
-        return list(self._tries)
+        with self._lock:
+            return list(self._tries)
 
     def resident(self, tenant: str) -> bool:
-        return any(t.device_resident for t in self._tries.get(tenant, ()))
+        with self._lock:
+            return any(t.device_resident
+                       for t in self._tries.get(tenant, ()))
 
     def resident_bytes(self) -> int:
-        return sum(t.nbytes() for ts in self._tries.values()
-                   for t in ts if t.device_resident)
+        """MODEL device bytes of every resident trie (what eviction
+        would actually reclaim), not host ``nbytes()``."""
+        from repro.analysis.memory_budget import trie_device_bytes
+        with self._lock:
+            return sum(trie_device_bytes(t) for ts in self._tries.values()
+                       for t in ts if t.device_resident)
 
-    def _resident_tenants(self) -> List[str]:
+    @guarded_by("_lock")
+    def _resident_tenants(self) -> list[str]:
         return [t for t in self._tries if self.resident(t)]
 
+    @guarded_by("_lock")
     def _over_budget(self) -> bool:
         if self.max_graphs is not None \
                 and len(self._resident_tenants()) > self.max_graphs:
@@ -107,20 +132,21 @@ class GraphStore:
         return self.capacity_bytes is not None \
             and self.resident_bytes() > self.capacity_bytes
 
-    def enforce(self) -> List[str]:
+    def enforce(self) -> list[str]:
         """Evict coldest-first until within budget; returns the evicted
         tenants.  The warmest resident tenant always survives (evicting
         the graph that was just queried would thrash)."""
-        evicted: List[str] = []
-        while self._over_budget():
-            resident = self._resident_tenants()
-            if len(resident) <= 1:
-                break
-            cold = resident[0]
-            for t in self._tries[cold]:
-                t.evict_device()
-            self.evictions += 1
-            evicted.append(cold)
+        evicted: list[str] = []
+        with self._lock:
+            while self._over_budget():
+                resident = self._resident_tenants()
+                if len(resident) <= 1:
+                    break
+                cold = resident[0]
+                for t in self._tries[cold]:
+                    t.evict_device()
+                self.evictions += 1
+                evicted.append(cold)
         return evicted
 
 
@@ -133,29 +159,43 @@ class QueryServer:
     and counters).  ``prepare``/``run`` serve point queries with
     bind-parameter plan reuse; ``submit``/``drain`` run an admission
     queue whose per-prepared-query groups execute as fused batches.
+
+    Thread safety: the server's own shared state (admission queue,
+    per-tenant engine and prepared-query maps, counters) is guarded by
+    ``self._lock`` (re-entrant: locked paths call ``_bump`` and
+    ``prepare``).  ``drain`` swaps the queue out under the lock and
+    executes OUTSIDE it, so a long batch never blocks admission.  The
+    engines and backend themselves are single-threaded per instance
+    (their caches are in ``concurrency_lint``'s accounted baseline) —
+    concurrent queries against the SAME tenant must be serialized by
+    the caller; the lock here makes admission, preparation and the
+    store's LRU/byte accounting safe across tenants.
     """
 
-    def __init__(self, backend=None, capacity_bytes: Optional[int] = None,
-                 max_graphs: Optional[int] = None, **engine_opts):
+    def __init__(self, backend=None, capacity_bytes: int | None = None,
+                 max_graphs: int | None = None, **engine_opts):
         self.backend: ExecBackend = make_backend(backend)
         self.store = GraphStore(capacity_bytes=capacity_bytes,
                                 max_graphs=max_graphs)
         self._engine_opts = dict(engine_opts)
-        self._engines: Dict[str, Engine] = {}
-        self._prepared: Dict[Tuple[str, str], PreparedQuery] = {}
-        self._queue: List[_Pending] = []
-        self.counters: Dict[str, int] = {}
+        self._lock = threading.RLock()
+        self._engines: dict[str, Engine] = {}
+        self._prepared: dict[tuple[str, str], PreparedQuery] = {}
+        self._queue: list[_Pending] = []
+        self.counters: dict[str, int] = {}
 
     # ------------------------------------------------------------- tenants
     def _bump(self, key: str, n: int = 1) -> None:
-        self.counters[key] = self.counters.get(key, 0) + n
+        with self._lock:
+            self.counters[key] = self.counters.get(key, 0) + n
 
     def engine(self, tenant: str) -> Engine:
-        eng = self._engines.get(tenant)
-        if eng is None:
-            eng = Engine(backend=self.backend, **self._engine_opts)
-            self._engines[tenant] = eng
-        return eng
+        with self._lock:
+            eng = self._engines.get(tenant)
+            if eng is None:
+                eng = Engine(backend=self.backend, **self._engine_opts)
+                self._engines[tenant] = eng
+            return eng
 
     def load_graph(self, tenant: str, name: str, src, dst,
                    annotation=None) -> Trie:
@@ -183,12 +223,13 @@ class QueryServer:
 
     # ------------------------------------------------------------- queries
     def prepare(self, tenant: str, text: str) -> PreparedQuery:
-        key = (tenant, text)
-        pq = self._prepared.get(key)
-        if pq is None:
-            pq = self.engine(tenant).prepare(text)
-            self._prepared[key] = pq
-        return pq
+        with self._lock:
+            key = (tenant, text)
+            pq = self._prepared.get(key)
+            if pq is None:
+                pq = self.engine(tenant).prepare(text)
+                self._prepared[key] = pq
+            return pq
 
     def run(self, tenant: str, text: str, *params) -> QueryResult:
         """Point query through the prepared-plan cache: the first call
@@ -214,20 +255,25 @@ class QueryServer:
         same-shape requests can share a fused batched launch."""
         pq = self.prepare(tenant, text)
         ticket = Ticket(tenant=tenant, params=pq._binding(params))
-        self._queue.append(_Pending(ticket=ticket, prepared=pq))
+        with self._lock:
+            self._queue.append(_Pending(ticket=ticket, prepared=pq))
         self._bump("queue.admitted")
         return ticket
 
     def pending(self) -> int:
-        return len(self._queue)
+        with self._lock:
+            return len(self._queue)
 
-    def drain(self) -> List[Ticket]:
+    def drain(self) -> list[Ticket]:
         """Execute every admitted request, grouped by prepared query:
         each group runs through ``PreparedQuery.run_batch`` (one fused
         launch per same-shape chunk on the device backend, sequential
-        parity loop elsewhere).  Tickets are filled in admission order."""
-        queue, self._queue = self._queue, []
-        groups: "OrderedDict[int, List[_Pending]]" = OrderedDict()
+        parity loop elsewhere).  Tickets are filled in admission order.
+        The queue is swapped out under the lock; execution happens
+        outside it so a long batch never blocks admission."""
+        with self._lock:
+            queue, self._queue = self._queue, []
+        groups: OrderedDict[int, list[_Pending]] = OrderedDict()
         for p in queue:
             groups.setdefault(id(p.prepared), []).append(p)
         for members in groups.values():
@@ -246,7 +292,7 @@ class QueryServer:
         return [p.ticket for p in queue]
 
     # ------------------------------------------------------------- stats
-    def dispatch_summary(self) -> Dict[str, int]:
+    def dispatch_summary(self) -> dict[str, int]:
         """Shared-backend dispatch counters merged with the server's
         per-tenant and queue counters."""
         out = dict(self.backend.dispatch_summary())

@@ -1,0 +1,179 @@
+"""Lock-discipline linter (repro.analysis.concurrency_lint) tests.
+
+Locks the serving-layer concurrency contract: every registered shared
+attribute is mutated only under ``self.*_lock`` (or inside a declared
+``@guarded_by`` method), ``serve/`` is lock-clean with no baseline
+escape hatch, and the accounted single-threaded-core findings exactly
+match ``concurrency_baseline.json`` in both directions.
+"""
+import textwrap
+
+from repro.analysis import concurrency_lint as CL
+
+FILE = "serve/query.py"   # label with registered shared state
+
+
+def lint(body: str):
+    src = "class QueryServer:\n" + textwrap.indent(
+        textwrap.dedent(body), "    ")
+    return CL.lint_source(src, FILE)
+
+
+def kinds(findings):
+    return [f.kind for f in findings]
+
+
+# ------------------------------------------------------------- snippets
+def test_unguarded_rmw_flagged():
+    fs = lint("""
+        def _bump(self, key):
+            self.counters[key] = self.counters.get(key, 0) + 1
+    """)
+    assert kinds(fs) == ["unguarded-rmw"]
+    assert "counters" in fs[0].detail
+
+
+def test_unguarded_append_flagged():
+    fs = lint("""
+        def submit(self, p):
+            self._queue.append(p)
+    """)
+    assert kinds(fs) == ["unguarded-rmw"]
+
+
+def test_unguarded_swap_in_tuple_unpack_flagged():
+    """The drain idiom — ``queue, self._queue = self._queue, []`` — is
+    a write hiding inside tuple unpacking."""
+    fs = lint("""
+        def drain(self):
+            queue, self._queue = self._queue, []
+            return queue
+    """)
+    assert kinds(fs) == ["unguarded-write"]
+
+
+def test_with_lock_guards_mutation():
+    fs = lint("""
+        def submit(self, p):
+            with self._lock:
+                self._queue.append(p)
+                self.counters["n"] = self.counters.get("n", 0) + 1
+    """)
+    assert fs == []
+
+
+def test_non_lock_with_does_not_guard():
+    fs = lint("""
+        def submit(self, p):
+            with self._file:
+                self._queue.append(p)
+    """)
+    assert kinds(fs) == ["unguarded-rmw"]
+
+
+def test_guarded_by_declares_lock_held():
+    fs = lint("""
+        @guarded_by("_lock")
+        def _drop(self, k):
+            self._engines.pop(k)
+    """)
+    assert fs == []
+
+
+def test_unheld_call_to_guarded_method_flagged():
+    fs = lint("""
+        @guarded_by("_lock")
+        def _drop(self, k):
+            self._engines.pop(k)
+
+        def evict(self, k):
+            self._drop(k)
+    """)
+    assert kinds(fs) == ["unheld-guard-call"]
+    assert "_lock" in fs[0].detail
+
+
+def test_held_call_to_guarded_method_clean():
+    fs = lint("""
+        @guarded_by("_lock")
+        def _drop(self, k):
+            self._engines.pop(k)
+
+        def evict(self, k):
+            with self._lock:
+                self._drop(k)
+    """)
+    assert fs == []
+
+
+def test_nested_def_does_not_inherit_lock():
+    """A closure runs later, possibly on another thread — holding the
+    lock at definition time guards nothing."""
+    fs = lint("""
+        def submit(self, p):
+            with self._lock:
+                def later():
+                    self._queue.append(p)
+                return later
+    """)
+    assert kinds(fs) == ["unguarded-rmw"]
+
+
+def test_init_writes_exempt():
+    fs = lint("""
+        def __init__(self):
+            self._queue = []
+            self.counters = {}
+    """)
+    assert fs == []
+
+
+def test_unregistered_attrs_ignored():
+    fs = lint("""
+        def note(self):
+            self._scratch.append(1)
+            self.tmp = 2
+    """)
+    assert fs == []
+
+
+def test_device_cache_store_flagged_anywhere():
+    src = textwrap.dedent("""
+        class DeviceBackend:
+            def _dev_sideways(self, bs):
+                bs._dev_sideways_cache = (bs.block_ids, ())
+    """)
+    fs = CL.lint_source(src, "core/backend.py")
+    assert kinds(fs) == ["unguarded-write"]
+    assert "_dev_sideways_cache" in fs[0].detail
+
+
+# ----------------------------------------------------------- the real tree
+def test_serve_is_lock_clean():
+    strict = CL.strict_findings(CL.lint_tree())
+    assert strict == [], [str(f) for f in strict]
+
+
+def test_tree_matches_committed_baseline():
+    findings = CL.lint_tree()
+    new, removed = CL.compare(findings, CL.load_baseline())
+    assert new == [], f"new unguarded shared-state mutations: {new}"
+    assert removed == [], (f"findings removed but baseline not shrunk: "
+                           f"{removed}")
+
+
+def test_guarded_by_is_a_runtime_noop():
+    @CL.guarded_by("_lock")
+    def f(self):
+        return 7
+
+    assert f(None) == 7
+    assert f.__guarded_by__ == "_lock"
+
+
+def test_graphstore_helpers_declared():
+    """The two budget helpers really carry the declaration the linter
+    verifies call sites against."""
+    from repro.serve.query import GraphStore
+    assert GraphStore._resident_tenants.__guarded_by__ == "_lock"
+    assert GraphStore._over_budget.__guarded_by__ == "_lock"

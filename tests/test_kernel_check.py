@@ -83,6 +83,46 @@ def test_spec_operand_count_mismatch_rejected():
         check_captured("fake", rec)
 
 
+def test_vmapped_frontier_fill_divergence_pinned():
+    """Satellite contract: ``jax.vmap`` over the frontier-fill launch
+    keeps per-lane values bit-exact BUT rewrites the launch geometry
+    away from the declared contract (grid (1,) -> (B, 1), Mapped block
+    dims, mixed-rank blocks).  This pins the exact divergence — it is
+    why ``_bag_program_batch`` pins ``fill_mode="jnp"``.  If a jax
+    upgrade makes this check pass, this test fails and the pin should
+    be revisited."""
+    from repro.analysis.kernel_check import KernelVmapDivergence
+    from repro.kernels.frontier_fill import ops as ff
+
+    with pytest.raises(KernelVmapDivergence) as ei:
+        kernel_check.check_vmap_contract(ff.CONTRACT_VMAP)
+    msg = str(ei.value)
+    assert f"(1,) -> ({ff._CONTRACT_BATCH}, 1)" in msg
+    assert "Mapped" in msg
+    assert "values match the oracle" in msg
+
+
+def test_vmapped_frontier_fill_parity_is_exact():
+    """The parity half alone: batched launch output equals the per-lane
+    oracle bit-for-bit (KernelContractError, not just the geometry
+    divergence, would mean broken semantics)."""
+    import numpy as onp
+
+    from repro.kernels.frontier_fill import ops as ff
+
+    inputs = ff.CONTRACT_VMAP["make_inputs"]()
+    jax.clear_caches()
+    out = ff.CONTRACT_VMAP["entry"](*inputs)
+    ref = ff.CONTRACT_VMAP["ref"](*inputs)
+    assert len(out) == len(ref)
+    for g, r in zip(out, ref):
+        assert onp.array_equal(onp.asarray(g), onp.asarray(r))
+    # lanes are genuinely distinct — parity is not vacuous
+    keep = onp.asarray(out[3])
+    assert any(not onp.array_equal(keep[0], keep[b])
+               for b in range(1, keep.shape[0]))
+
+
 def test_contract_oracle_mismatch_rejected():
     """A contract whose entry disagrees with its oracle must fail."""
     from repro.kernels.uint_intersect import ops as uops

@@ -1,0 +1,161 @@
+"""Static HBM footprint model (repro.analysis.memory_budget) tests.
+
+Locks the tentpole contract: the model predicts the live device-cache
+bytes EXACTLY (uploads go through known dtypes — any drift is a missed
+component and raises), ``serve.GraphStore`` budgets eviction on model
+device bytes rather than host ``nbytes()``, and the frontier/fixpoint
+helpers size the transient buffers from the lowered program.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import memory_budget as MB
+from repro.core.engine import Engine
+from repro.core.workload import ALIASES, FOUR_CLIQUE, TRIANGLE_COUNT
+from repro.data import powerlaw_graph
+from repro.serve.query import QueryServer
+
+
+@pytest.fixture(scope="module")
+def device_engine():
+    # 80/5 is dense enough that the counting pass routes through the
+    # blocked bitset (its device directory is a modeled component)
+    g = powerlaw_graph(80, 5, 2.0, seed=0)
+    src = np.repeat(np.arange(g.n), g.degrees)
+    eng = Engine(backend="device")
+    trie = eng.load_edges("Edge", src, g.neighbors)
+    for al in ALIASES:
+        eng.alias(al, "Edge")
+    records = []
+    eng.backend.audit_log = records
+    try:
+        eng.query(TRIANGLE_COUNT)
+        eng.query(FOUR_CLIQUE)    # routes a probe through the bitset
+    finally:
+        eng.backend.audit_log = None
+    return eng, trie, records
+
+
+# ---------------------------------------------------------- model vs live
+def test_model_matches_live_exactly(device_engine):
+    _eng, trie, _ = device_engine
+    fp = MB.trie_footprint(trie)
+    assert fp.components, "triangle query left no device caches"
+    for c in fp.components:
+        assert c.model_bytes == c.live_bytes, c
+    assert fp.model_bytes == fp.live_bytes
+
+
+def test_model_counts_components_host_nbytes_misses(device_engine):
+    """Device bytes != host bytes: offsets narrow to int32 on upload
+    (x64 off) and the bitset block directory exists only on device."""
+    _eng, trie, _ = device_engine
+    fp = MB.trie_footprint(trie)
+    names = {c.name for c in fp.components}
+    assert any(n.startswith("bitset_dir") for n in names)
+    offsets = [c for c in fp.components if c.name.endswith(".offsets")]
+    assert offsets, "no offsets resident — upload path changed?"
+    import jax
+    if not jax.config.jax_enable_x64:
+        for i, lv in enumerate(trie.levels):
+            for c in offsets:
+                if c.name == f"level{i}.offsets":
+                    # host holds int64, device holds int32: half
+                    assert c.model_bytes * 2 == lv.offsets.nbytes
+    assert fp.model_bytes != trie.nbytes()
+
+
+def test_drift_raises_with_component_breakdown(device_engine):
+    _eng, trie, _ = device_engine
+    lv = next(lv for lv in trie.levels
+              if lv.__dict__.get("_dev_values") is not None)
+    real = lv.__dict__["_dev_values"]
+    # fake an unaccounted 4 KiB device buffer behind the cache key
+    lv.__dict__["_dev_values"] = (real[0], np.zeros(1024, np.int32))
+    try:
+        with pytest.raises(MB.MemoryBudgetError, match="drift"):
+            MB.check_tries([trie])
+    finally:
+        lv.__dict__["_dev_values"] = real
+    MB.check_tries([trie])   # restored: clean again
+
+
+def test_check_counters_surface(device_engine):
+    eng, trie, _ = device_engine
+    before = eng.backend.stats.get("analysis.memory_checks", 0)
+    MB.check_tries([trie], counters=eng.backend.stats)
+    summary = eng.dispatch_summary()
+    assert summary["analysis.memory_checks"] == before + 1
+    assert summary["analysis.memory_model_bytes"] > 0
+
+
+def test_full_upload_upper_bounds_resident(device_engine):
+    _eng, trie, _ = device_engine
+    assert MB.trie_full_upload_bytes(trie) \
+        >= MB.trie_device_bytes(trie) > 0
+
+
+# ------------------------------------------------------- transient buffers
+def test_program_frontier_bytes_from_recorded_program(device_engine):
+    _eng, _trie, records = device_engine
+    prog = next(r[2] for r in records if r[0] == "bag")
+    ext = [s for s in prog if s[0] == "extend"]
+    assert ext
+    got = MB.program_frontier_bytes(prog)
+    idx = MB._idx_itemsize()
+    want = sum(s[2] * (4 + idx * (2 + max(len(s[4]) - 1, 0)) + 1)
+               for s in ext)
+    assert got == want > 0
+    # the batched path allocates per lane
+    assert MB.program_frontier_bytes(prog, batch=4) == 4 * got
+
+
+def test_fixpoint_state_bytes():
+    # x64 off: float64 state narrows to 4 bytes + 1 frontier bool
+    import jax
+    per = 9 if jax.config.jax_enable_x64 else 5
+    assert MB.fixpoint_state_bytes(100, np.float64) == 100 * per
+
+
+# -------------------------------------------------- GraphStore integration
+def test_graphstore_budgets_on_model_bytes():
+    """``resident_bytes`` must agree with the model per registered trie
+    — eviction decisions run off the static model, not host nbytes."""
+    g = powerlaw_graph(40, 4, 2.0, seed=1)
+    src = np.repeat(np.arange(g.n), g.degrees)
+    srv = QueryServer(backend="device")
+    trie = srv.load_graph("a", "Edge", src, g.neighbors)
+    for al in ALIASES:
+        srv.alias("a", al, "Edge")
+    assert srv.store.resident_bytes() == 0    # nothing uploaded yet
+    srv.run("a", TRIANGLE_COUNT)
+    model = MB.trie_device_bytes(trie)
+    assert srv.store.resident_bytes() == model > 0
+    assert model != trie.nbytes()
+
+
+def test_eviction_uses_model_budget():
+    """A budget sized between one and two model footprints evicts the
+    cold tenant and keeps the warm one."""
+    g = powerlaw_graph(40, 4, 2.0, seed=1)
+    src = np.repeat(np.arange(g.n), g.degrees)
+    probe = QueryServer(backend="device")
+    t0 = probe.load_graph("x", "Edge", src, g.neighbors)
+    for al in ALIASES:
+        probe.alias("x", al, "Edge")
+    probe.run("x", TRIANGLE_COUNT)
+    one = MB.trie_device_bytes(t0)
+
+    srv = QueryServer(backend="device", capacity_bytes=int(1.5 * one))
+    for tenant in ("a", "b"):
+        srv.load_graph(tenant, "Edge", src, g.neighbors)
+        for al in ALIASES:
+            srv.alias(tenant, al, "Edge")
+    srv.run("a", TRIANGLE_COUNT)
+    assert srv.store.resident(a := "a")
+    srv.run("b", TRIANGLE_COUNT)
+    # both resident would cost ~2x the budget: the cold tenant dropped
+    assert not srv.store.resident(a)
+    assert srv.store.resident("b")
+    assert srv.store.resident_bytes() <= int(1.5 * one)
+    assert srv.counters.get("store.evictions", 0) >= 1
